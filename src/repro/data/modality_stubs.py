@@ -1,0 +1,25 @@
+"""Stub modality frontends (per the assignment: '[audio]/[vlm] entries
+specify the transformer BACKBONE only; the modality frontend is a STUB').
+
+These provide shape- and dtype-faithful precomputed embeddings:
+  audio : EnCodec frame embeddings  [B, S, d_model]
+  vlm   : ViT patch embeddings      [B, 1600, d_model]
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def encodec_frames(rng: np.random.Generator, batch: int, seq: int,
+                   d_model: int, dtype=jnp.bfloat16):
+    """Stand-in for EnCodec encoder output at 50 Hz frame rate."""
+    x = rng.normal(0.0, 1.0, size=(batch, seq, d_model)).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def vit_patches(rng: np.random.Generator, batch: int, n_patches: int,
+                d_model: int, dtype=jnp.bfloat16):
+    """Stand-in for a ViT-H/14 vision tower output (1600 patches @ 448px)."""
+    x = rng.normal(0.0, 1.0, size=(batch, n_patches, d_model)).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)

@@ -1,0 +1,44 @@
+"""Shared helpers for Pallas TPU kernels (padding, interpret detection)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128      # TPU minor-dim tile (VREG lanes / MXU edge)
+SUBLANE = 8     # fp32 second-minor tile
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """interpret=None -> auto: compiled on TPU, interpreted elsewhere (CPU CI)."""
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple (no-op if aligned)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def padded(size: int, multiple: int) -> int:
+    return size + ((-size) % multiple)
+
+
+def pick_block(size: int, preferred: int, multiple: int = 1) -> int:
+    """Largest block <= preferred that divides ``size`` and is a multiple of
+    ``multiple`` — fall back to ``size`` itself (single block)."""
+    best = None
+    b = multiple
+    while b <= min(preferred, size):
+        if size % b == 0:
+            best = b
+        b += multiple
+    return best if best is not None else size

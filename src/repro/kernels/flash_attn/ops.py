@@ -1,0 +1,55 @@
+"""Jitted public wrapper for blocked attention (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_attn import kernel as K
+from repro.kernels.flash_attn import ref as R
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, hd]
+    k: jax.Array,  # [B, Hkv, Sk, hd]
+    v: jax.Array,  # [B, Hkv, Sk, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention with GQA broadcast.  Returns [B, Hq, Sq, hd]."""
+    interpret = common.resolve_interpret(interpret)
+    b, hq, sq, hd = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    if hkv != hq:  # GQA: broadcast kv heads to query groups
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    scale = 1.0 / (hd ** 0.5)
+    sk = k.shape[2]
+    bq = block_q or common.pick_block(sq, 128, 8)
+    bk = block_k or common.pick_block(sk, 128, 8)
+
+    out = K.flash_attention_pallas(
+        q.reshape(b * hq, sq, hd),
+        k.reshape(b * hq, sk, hd),
+        v.reshape(b * hq, sk, hd),
+        causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, hd)
+
+
+# re-export the oracle for tests
+attention_ref = R.attention_ref

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for blocked (flash) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, hd]
+    k: jax.Array,  # [B, H, Sk, hd]
+    v: jax.Array,  # [B, H, Sk, hd]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    window: int | None = None,
+) -> jax.Array:
+    """Dense softmax attention with optional causal / sliding-window mask.
+
+    Assumes q/k head counts already match (GQA broadcast handled by caller).
+    ``window``: sliding-window attention — key j visible to query i iff
+    i - window < j <= i (combined with causal).
+    """
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    sq, sk = q.shape[2], k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (decode: sq < sk)
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= qi - kj < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

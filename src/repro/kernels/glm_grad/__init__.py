@@ -1,0 +1,1 @@
+from repro.kernels.glm_grad.ops import glm_grad  # noqa: F401

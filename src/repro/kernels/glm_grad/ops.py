@@ -1,0 +1,49 @@
+"""Jitted public wrapper for the fused GLM gradient kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.glm_grad import kernel as K
+
+
+@functools.partial(
+    jax.jit, static_argnames=("task", "layout", "block_rows", "interpret")
+)
+def glm_grad(
+    task: str,
+    w: jax.Array,   # [d]
+    X: jax.Array,   # [N, d]
+    y: jax.Array,   # [N]
+    *,
+    layout: str = "row",
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sum GLM gradient via the fused Pallas kernel.  Returns [d].
+
+    Pads d to the 128-lane tile and N to the row-block size (zero example
+    rows contribute zero gradient, so padding is exact).  ``layout='col'``
+    materializes the transpose up front — the paper's col-major access path.
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = X.shape
+    d_pad = common.padded(d, common.LANE)
+    if block_rows is None:
+        block_rows = max(common.SUBLANE, min(512, common.padded(n, common.SUBLANE)))
+    n_pad = common.padded(n, block_rows)
+
+    Xp = common.pad_to(common.pad_to(X.astype(jnp.float32), 1, d_pad), 0, n_pad)
+    yp = common.pad_to(y.astype(jnp.float32).reshape(n, 1), 0, n_pad, value=1.0)
+    wp = common.pad_to(w.astype(jnp.float32).reshape(d, 1), 0, d_pad)
+
+    if layout == "col":
+        Xp = Xp.T  # materialized transpose (paper: col-major path)
+
+    g = K.glm_grad_pallas(
+        task, wp, Xp, yp, layout=layout, block_rows=block_rows, interpret=interpret
+    )
+    return g[:d, 0]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused GLM gradient kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def glm_grad_ref(task: str, w: jax.Array, X: jax.Array, y: jax.Array) -> jax.Array:
+    """Sum gradient of the GLM loss over the batch: X^T pull(y * Xw)."""
+    margins = y * (X @ w)
+    if task == "lr":
+        pull = -y * jax.nn.sigmoid(-margins)
+    elif task == "svm":
+        pull = -y * (margins < 1.0).astype(X.dtype)
+    else:
+        raise ValueError(task)
+    return X.T @ pull

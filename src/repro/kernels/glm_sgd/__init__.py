@@ -1,0 +1,1 @@
+from repro.kernels.glm_sgd.ops import glm_sgd_epoch  # noqa: F401

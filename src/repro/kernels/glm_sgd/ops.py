@@ -1,0 +1,41 @@
+"""Jitted public wrapper for the fused incremental-SGD epoch kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.glm_sgd import kernel as K
+
+
+@functools.partial(
+    jax.jit, static_argnames=("task", "step", "micro_batch", "interpret")
+)
+def glm_sgd_epoch(
+    task: str,
+    w: jax.Array,   # [d]
+    X: jax.Array,   # [N, d]
+    y: jax.Array,   # [N]
+    *,
+    step: float,
+    micro_batch: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused SGD epoch over (X, y); model stays in VMEM throughout.
+
+    N must be divisible by ``micro_batch`` (the data pipeline guarantees
+    this); d is padded to the 128-lane tile internally.
+    """
+    interpret = common.resolve_interpret(interpret)
+    n, d = X.shape
+    assert n % micro_batch == 0, (n, micro_batch)
+    d_pad = common.padded(d, common.LANE)
+    Xp = common.pad_to(X.astype(jnp.float32), 1, d_pad)
+    yp = y.astype(jnp.float32).reshape(n, 1)
+    wp = common.pad_to(w.astype(jnp.float32).reshape(d, 1), 0, d_pad)
+    w_out = K.glm_sgd_pallas(
+        task, wp, Xp, yp, step=step, micro_batch=micro_batch, interpret=interpret
+    )
+    return w_out[:d, 0]

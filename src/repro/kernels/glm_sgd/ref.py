@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused incremental-SGD epoch kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pull(task, margins, y):
+    if task == "lr":
+        return -y * jax.nn.sigmoid(-margins)
+    return -y * (margins < 1.0).astype(margins.dtype)
+
+
+def glm_sgd_epoch_ref(
+    task: str, w: jax.Array, X: jax.Array, y: jax.Array, step: float, batch: int
+) -> jax.Array:
+    """Sequential mini-batch SGD pass: w -= (step/batch) * sum-grad per batch.
+
+    batch=1 is exact incremental SGD (paper Algorithm 3)."""
+    n, d = X.shape
+    assert n % batch == 0
+    Xb = X.reshape(n // batch, batch, d)
+    yb = y.reshape(n // batch, batch)
+
+    def body(w, xy):
+        Xk, yk = xy
+        margins = yk * (Xk @ w)
+        g = Xk.T @ _pull(task, margins, yk)
+        return w - (step / batch) * g, None
+
+    w_out, _ = jax.lax.scan(body, w, (Xb, yb))
+    return w_out

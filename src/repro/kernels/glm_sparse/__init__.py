@@ -1,0 +1,1 @@
+from repro.kernels.glm_sparse.ops import ell_glm_grad  # noqa: F401

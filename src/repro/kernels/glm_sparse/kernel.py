@@ -1,0 +1,122 @@
+"""ELL sparse GLM gradient Pallas kernel — gather/scatter as one-hot MXU ops.
+
+The paper pads CSR to a fixed width so the GPU col-major path gets coalesced
+access (Section 5.2.1).  The TPU analogue goes further: there is no efficient
+per-lane random gather into VMEM, but the MXU turns gather/scatter over a
+*bounded feature block* into dense matmuls against a one-hot matrix:
+
+    gather :  w[idx]        ==  onehot(idx, Db) @ w_block
+    scatter:  g[idx] += c   ==  g_block += onehot(idx, Db)^T @ c
+
+The kernel runs a two-phase sequential grid (phase, d-block, row-tile):
+
+    phase 0:  accumulate margins m_i = x_i . w across d-blocks into a
+              VMEM-resident margin buffer (whole shard);
+    phase 1:  pull_i = f'(y_i m_i); scatter-accumulate vals * pull into the
+              gradient d-block (row tiles are contiguous per d-block, so the
+              output block accumulates in VMEM and flushes exactly once).
+
+Everything is fixed-shape; the only data-dependent values are the indices,
+which never leave the integer compare feeding the one-hot.  Padded entries
+(value 0) contribute 0 to both phases, so no explicit masking is needed
+beyond clamping out-of-block indices to 0 with value 0.  This trades
+O(N*K*d) MXU FLOPs for zero irregular memory traffic — profitable exactly
+when d is moderate (w8a / real-sim scale).  For very wide models (news) the
+XLA gather/segment-sum path (ref.py) is the production path; ops.py picks
+automatically based on a VMEM/FLOP budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pull(task, margins, y):
+    if task == "lr":
+        return -y * jax.nn.sigmoid(-margins)
+    return -y * (margins < 1.0).astype(margins.dtype)
+
+
+def _kernel(task, d_block, vals_ref, idx_ref, y_ref, w_ref, g_ref, mar_s):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)          # d block   (output block: slow axis)
+    i = pl.program_id(2)          # row tile  (contiguous revisits per block)
+
+    vals = vals_ref[...]          # [TB, K]
+    idx = idx_ref[...]            # [TB, K] int32 (global feature ids)
+    tb, kk = vals.shape
+
+    lo = j * d_block
+    local = idx - lo              # [TB, K]
+    in_block = (local >= 0) & (local < d_block)
+    local = jnp.where(in_block, local, 0)
+    sel = jnp.where(in_block, vals, 0.0)       # masked values (0 => no-op)
+
+    # one-hot [TB*K, Db] — the MXU-side gather/scatter operand
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (tb * kk, d_block), 1)
+    onehot = (local.reshape(tb * kk, 1) == iota_d).astype(jnp.float32)
+
+    @pl.when(phase == 0)
+    def _phase0():
+        @pl.when(j == 0)
+        def _():
+            mar_s[pl.ds(i * tb, tb), :] = jnp.zeros((tb, 1), jnp.float32)
+
+        w_blk = w_ref[...]                     # [Db, 1]
+        wg = jnp.dot(onehot, w_blk, preferred_element_type=jnp.float32)
+        partial = jnp.sum(sel * wg.reshape(tb, kk), axis=1, keepdims=True)
+        mar_s[pl.ds(i * tb, tb), :] += partial
+
+    @pl.when(phase == 1)
+    def _phase1():
+        @pl.when(i == 0)
+        def _():
+            g_ref[...] = jnp.zeros_like(g_ref)
+
+        y = y_ref[...]                         # [TB, 1]
+        m = y * mar_s[pl.ds(i * tb, tb), :]    # full margins (phase 0 done)
+        pull = _pull(task, m, y)               # [TB, 1]
+        contrib = (sel * pull).reshape(tb * kk, 1)
+        g_ref[...] += jax.lax.dot_general(     # onehot^T @ contrib -> [Db, 1]
+            onehot, contrib, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def ell_glm_grad_pallas(
+    task: str,
+    w: jax.Array,        # [d_pad, 1]
+    values: jax.Array,   # [N_pad, K]
+    indices: jax.Array,  # [N_pad, K] int32
+    y: jax.Array,        # [N_pad, 1]
+    *,
+    block_rows: int,
+    d_block: int,
+    interpret: bool,
+) -> jax.Array:
+    n_pad, kk = values.shape
+    d_pad = w.shape[0]
+    assert n_pad % block_rows == 0 and d_pad % d_block == 0
+    grid = (2, d_pad // d_block, n_pad // block_rows)
+    body = functools.partial(_kernel, task, d_block)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, kk), lambda p, j, i: (i, 0)),  # values
+            pl.BlockSpec((block_rows, kk), lambda p, j, i: (i, 0)),  # indices
+            pl.BlockSpec((block_rows, 1), lambda p, j, i: (i, 0)),   # y
+            pl.BlockSpec((d_block, 1), lambda p, j, i: (j, 0)),      # w block
+        ],
+        out_specs=pl.BlockSpec((d_block, 1), lambda p, j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_pad, 1), jnp.float32)],  # margins
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(values, indices, y, w)

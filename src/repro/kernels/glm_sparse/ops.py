@@ -1,0 +1,61 @@
+"""Jitted public wrapper for the ELL sparse GLM gradient.
+
+Picks between the Pallas one-hot-MXU kernel (moderate d, bounded N) and the
+XLA gather/segment-sum path (ref) based on a VMEM/FLOP budget — the sparse
+analogue of the paper's per-dataset optimal-configuration finding (Table 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.glm_sparse import kernel as K
+from repro.kernels.glm_sparse import ref as R
+
+# Budget heuristics for choosing the Pallas path.
+_MAX_D_PALLAS = 32_768      # one-hot FLOPs grow with d
+_MAX_N_PALLAS = 131_072     # margin scratch = N * 4 bytes of VMEM
+
+
+def pallas_path_ok(n: int, d: int) -> bool:
+    return d <= _MAX_D_PALLAS and n <= _MAX_N_PALLAS
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("task", "block_rows", "d_block", "interpret", "force_path"),
+)
+def ell_glm_grad(
+    task: str,
+    w: jax.Array,        # [d]
+    values: jax.Array,   # [N, K]
+    indices: jax.Array,  # [N, K] int32
+    y: jax.Array,        # [N]
+    *,
+    block_rows: int = 8,
+    d_block: int = 512,
+    interpret: bool | None = None,
+    force_path: str | None = None,   # "pallas" | "xla" | None (auto)
+) -> jax.Array:
+    interpret = common.resolve_interpret(interpret)
+    n, kk = values.shape
+    d = w.shape[0]
+
+    path = force_path or ("pallas" if pallas_path_ok(n, d) else "xla")
+    if path == "xla":
+        return R.ell_glm_grad_ref(task, w, values, indices, y)
+
+    d_pad = common.padded(d, d_block)
+    n_pad = common.padded(n, block_rows)
+    vp = common.pad_to(values.astype(jnp.float32), 0, n_pad)
+    ip = common.pad_to(indices.astype(jnp.int32), 0, n_pad)
+    yp = common.pad_to(y.astype(jnp.float32).reshape(n, 1), 0, n_pad, value=1.0)
+    wp = common.pad_to(w.astype(jnp.float32).reshape(d, 1), 0, d_pad)
+    g = K.ell_glm_grad_pallas(
+        task, wp, vp, ip, yp,
+        block_rows=block_rows, d_block=d_block, interpret=interpret,
+    )
+    return g[:d, 0]

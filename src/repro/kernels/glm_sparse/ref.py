@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the ELL sparse GLM gradient kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pull(task, margins, y):
+    if task == "lr":
+        return -y * jax.nn.sigmoid(-margins)
+    return -y * (margins < 1.0).astype(margins.dtype)
+
+
+def ell_glm_grad_ref(
+    task: str,
+    w: jax.Array,        # [d]
+    values: jax.Array,   # [N, K]  zero-padded
+    indices: jax.Array,  # [N, K]  int32 (0-padded; padded values are 0)
+    y: jax.Array,        # [N]
+) -> jax.Array:
+    """Sum GLM gradient on ELL data via gather + segment-sum (XLA path)."""
+    d = w.shape[0]
+    wg = jnp.take(w, indices, axis=0)            # [N, K]
+    margins = y * jnp.sum(values * wg, axis=1)   # [N]
+    pull = _pull(task, margins, y)
+    contrib = values * pull[:, None]             # [N, K]
+    return jax.ops.segment_sum(
+        contrib.reshape(-1), indices.reshape(-1), num_segments=d
+    )

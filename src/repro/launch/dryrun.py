@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init.  512 placeholder host devices back the production
+# meshes; nothing else in the repo sets this flag (tests/benches see 1 dev).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod (16,16) and multi-pod (2,16,16) meshes; record memory analysis,
+cost analysis and gzipped post-SPMD HLO for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # full sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multipod-only
+
+Each cell runs in-process; ``--all`` spawns one subprocess per cell so a
+compiler OOM/fault cannot kill the sweep (fault isolation, like the real
+launcher).  Results land in dryrun_results/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import gzip
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "dryrun_results"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, update: str = "sync",
+             save_hlo: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    from repro import configs
+    from repro.launch import mesh as mesh_mod
+    from repro.launch import specs as specs_mod
+    from repro.optim.sgd import sgd as make_sgd
+    from repro.train import trainer
+
+    t0 = time.time()
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    cell = specs_mod.input_specs(arch, shape)
+    cfg, kind = cell["cfg"], cell["kind"]
+    if cfg.moe_experts:
+        # group-local MoE dispatch: one group per batch shard
+        import dataclasses as _dc
+        n_batch_shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_batch_shards *= mesh.shape[a]
+        cfg = _dc.replace(cfg, moe_groups=min(n_batch_shards, cell["gb"]),
+                          moe_model_shards=mesh.shape["model"])
+        cell["cfg"] = cfg
+        cell["params"] = specs_mod.param_shapes_and_specs(cfg)
+    p_shapes, p_specs = cell["params"]
+    b_shapes, b_specs = cell["batch"]
+
+    # when the global batch cannot shard over the batch axes (long_500k has
+    # B=1), replicate the batch and spread KV caches over the whole mesh
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_prod = 1
+    for a in batch_axes:
+        batch_prod *= mesh.shape[a]
+    cell_extra = None
+    if cell["gb"] % batch_prod:
+        cell_extra = {"batch": (), "kvseq": (*batch_axes, "model")}
+
+    def shardings(specs, extra=None):
+        ex = dict(cell_extra or {})
+        ex.update(extra or {})
+        return trainer.resolve_tree(specs, mesh, cfg, extra=ex or None)
+
+    with mesh:
+        if kind == "train":
+            # plain SGD: the paper's optimizer (momentum costs another
+            # param-sized buffer; kimi-scale memory notes in EXPERIMENTS.md)
+            opt = make_sgd(1e-2)
+            o_shapes = jax.eval_shape(opt.init, p_shapes)
+            o_specs = trainer.opt_state_specs(o_shapes, p_specs)
+
+            if update == "sync":
+                step = trainer.make_sync_step(cfg, mesh, opt, p_specs)
+                in_sh = (shardings(p_specs), shardings(o_specs),
+                         shardings(b_specs))
+                out_sh = (shardings(p_specs), shardings(o_specs),
+                          NamedSharding(mesh, P()))
+                args = (p_shapes, o_shapes, b_shapes)
+            else:  # async-local: replica axis over "pod"
+                assert multi_pod, "async-local needs the pod axis"
+                R = mesh.shape["pod"]
+                local, merge = trainer.make_async_local_step(
+                    cfg, mesh, opt, p_specs)
+                stack = lambda t: jax.tree.map(  # noqa: E731
+                    lambda x: jax.ShapeDtypeStruct((R, *x.shape), x.dtype), t)
+                rep = {"batch": ("data",)}  # replica batch: data axis only
+                pod_specs = jax.tree.map(
+                    lambda s: P("pod", *s), p_specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                pod_o_specs = trainer.opt_state_specs(o_shapes, pod_specs)
+                pod_o_specs["step"] = P("pod")  # per-replica counter [R]
+                b_specs_r = jax.tree.map(
+                    lambda s: P("pod", *s), b_specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                b_shapes_r = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (R, x.shape[0] // R, *x.shape[1:]), x.dtype), b_shapes)
+                step = local
+                in_sh = (shardings(pod_specs, extra=rep),
+                         shardings(pod_o_specs, extra=rep),
+                         shardings(b_specs_r, extra=rep))
+                out_sh = (shardings(pod_specs, extra=rep),
+                          shardings(pod_o_specs, extra=rep),
+                          NamedSharding(mesh, P("pod")))
+                args = (stack(p_shapes),
+                        jax.eval_shape(lambda p: jax.vmap(opt.init)(p),
+                                       stack(p_shapes)),
+                        b_shapes_r)
+
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+
+        elif kind == "prefill":
+            step = trainer.make_prefill_step(cfg, mesh)
+            c_shapes, c_specs = specs_mod.cache_shapes_and_specs(
+                cfg, cell["gb"], cell["seq"])
+            in_sh = (shardings(p_specs), shardings(b_specs))
+            out_sh = (NamedSharding(mesh, P()), shardings(c_specs))
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(p_shapes, b_shapes)
+
+        else:  # decode
+            step = trainer.make_decode_step(cfg, mesh)
+            c_shapes, c_specs = cell["cache"]
+            in_sh = (shardings(p_specs), shardings(c_specs),
+                     shardings(b_specs), NamedSharding(mesh, P()))
+            out_sh = (NamedSharding(mesh, P()), shardings(c_specs))
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                p_shapes, c_shapes, b_shapes, idx)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "update": update, "kind": kind,
+        "seq": cell["seq"], "global_batch": cell["gb"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_analysis": {k: cost[k] for k in
+                          ("flops", "bytes accessed", "transcendentals")
+                          if k in cost},
+        "status": "ok",
+    }
+    if save_hlo:
+        RESULTS_DIR.mkdir(exist_ok=True)
+        hlo_path = RESULTS_DIR / _cell_name(arch, shape, multi_pod, update,
+                                            ext=".hlo.gz")
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(compiled.as_text())
+        result["hlo_file"] = str(hlo_path)
+    return result
+
+
+def _cell_name(arch, shape, multi_pod, update="sync", ext=".json"):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    upd = "" if update == "sync" else f"__{update}"
+    return f"{arch}__{shape}__{mesh}{upd}{ext}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--update", default="sync", choices=["sync", "async"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if not args.all:
+        res = run_cell(args.arch, args.shape, args.multipod, args.update)
+        RESULTS_DIR.mkdir(exist_ok=True)
+        out = RESULTS_DIR / _cell_name(args.arch, args.shape, args.multipod,
+                                       args.update)
+        out.write_text(json.dumps(res, indent=1))
+        print(json.dumps({k: v for k, v in res.items() if k != "hlo_file"}))
+        return
+
+    # sweep: one subprocess per cell (fault isolation)
+    from repro import configs
+    RESULTS_DIR.mkdir(exist_ok=True)
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+    cells = [(a, s, mp) for mp in meshes for (a, s) in configs.cells()]
+    failures = []
+    for arch, shape, mp in cells:
+        out = RESULTS_DIR / _cell_name(arch, shape, mp)
+        if out.exists() and not args.force:
+            print(f"skip {out.name}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape] + (
+                   ["--multipod"] if mp else [])
+        print(f"=== {arch} {shape} {'2x16x16' if mp else '16x16'}",
+              flush=True)
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        if r.returncode != 0:
+            failures.append((arch, shape, mp))
+            out.write_text(json.dumps({
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "fail", "stderr": r.stderr[-4000:],
+            }, indent=1))
+            print(f"    FAIL ({time.time()-t0:.0f}s): "
+                  f"{r.stderr.strip().splitlines()[-1] if r.stderr else '?'}")
+        else:
+            print(f"    ok ({time.time()-t0:.0f}s)")
+    print(f"done; {len(failures)} failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

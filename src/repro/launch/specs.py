@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+Nothing here allocates: params/optimizer/cache shapes come from
+``jax.eval_shape`` over the real init functions (the spec trees are stashed
+via closure during tracing), and batch inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.nn import decode as decode_mod
+from repro.nn import transformer
+from repro.nn.transformer import ArchConfig
+
+
+def param_shapes_and_specs(cfg: ArchConfig):
+    box = {}
+
+    def f(key):
+        p, s = transformer.init_params(cfg, key)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def cache_shapes_and_specs(cfg: ArchConfig, batch: int, max_len: int):
+    box = {}
+
+    def f():
+        c, s = decode_mod.init_cache(cfg, batch, max_len)
+        box["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["specs"]
+
+
+def batch_specs(cfg: ArchConfig, kind: str, seq: int, gb: int):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the step inputs."""
+    i32, bf16 = jnp.int32, cfg.param_dtype
+    shapes, specs = {}, {}
+    s = 1 if kind == "decode" else seq
+    if cfg.emb_in():
+        shapes["embeddings"] = jax.ShapeDtypeStruct((gb, s, cfg.d_model), bf16)
+        specs["embeddings"] = P("batch", None, None)
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((gb, s), i32)
+        specs["tokens"] = P("batch", None)
+    if cfg.family == "vlm":
+        shapes["memory"] = jax.ShapeDtypeStruct((gb, cfg.n_memory, cfg.d_model),
+                                                bf16)
+        specs["memory"] = P("batch", None, None)
+    if kind == "train":
+        shapes["labels"] = jax.ShapeDtypeStruct((gb, seq), i32)
+        specs["labels"] = P("batch", None)
+    return shapes, specs
+
+
+def input_specs(arch: str, shape: str):
+    """Everything dryrun needs for one cell (shape structs + spec trees)."""
+    cfg = configs.get(arch)
+    kind, seq, gb = configs.SHAPES[shape]
+    p_shapes, p_specs = param_shapes_and_specs(cfg)
+    b_shapes, b_specs = batch_specs(cfg, kind, seq, gb)
+    out = dict(cfg=cfg, kind=kind, seq=seq, gb=gb,
+               params=(p_shapes, p_specs), batch=(b_shapes, b_specs))
+    if kind == "decode":
+        out["cache"] = cache_shapes_and_specs(cfg, gb, seq)
+    return out

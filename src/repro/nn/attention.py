@@ -1,0 +1,210 @@
+"""Attention: GQA self-attention (full / sliding-window), cross-attention,
+and a memory-bounded chunked ("XLA-flash") formulation used at scale.
+
+Two execution paths share the same math:
+
+* ``kernels/flash_attn`` — the Pallas TPU kernel (runtime path on TPU).
+* ``chunked_attention`` here — pure-XLA online-softmax scan over KV chunks;
+  this is what the multi-pod dry-run lowers (Pallas cannot compile for the
+  CPU placeholder backend), and its HLO is what the roofline reads.  Peak
+  memory is O(B*H*Sq*Tk) per chunk instead of O(B*H*Sq*Sk).
+
+Decode path: single-token query against a KV cache (ring buffer for SWA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as pm
+from repro.nn import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype, *, fsdp: bool = False):
+    ks = jax.random.split(key, 4)
+    fa = ("data", "pod") if fsdp else None  # pod joins FSDP on multi-pod meshes
+    params = {
+        "wq": pm.normal(ks[0], (d_model, n_heads * head_dim), d_model ** -0.5, dtype),
+        "wk": pm.normal(ks[1], (d_model, n_kv * head_dim), d_model ** -0.5, dtype),
+        "wv": pm.normal(ks[2], (d_model, n_kv * head_dim), d_model ** -0.5, dtype),
+        "wo": pm.normal(ks[3], (n_heads * head_dim, d_model),
+                        (n_heads * head_dim) ** -0.5, dtype),
+    }
+    specs = {
+        "wq": P(fa, "model"), "wk": P(fa, "model"), "wv": P(fa, "model"),
+        "wo": P("model", fa),
+    }
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure XLA; the dry-run/roofline path)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,   # [B, Hq, Sq, hd]
+    k: jax.Array,   # [B, Hkv, Sk, hd]
+    v: jax.Array,   # [B, Hkv, Sk, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk_q: int = 512,
+) -> jax.Array:
+    """Query-chunked attention with rematerialized chunk bodies.
+
+    Each q chunk attends independently (no carried softmax state), so the
+    backward pass recomputes one [B, H, Tq, Sk] score block at a time
+    instead of saving every block — peak memory is O(B*H*Tq*Sk), not
+    O(B*H*Sq*Sk).  For sliding-window attention the key range per q chunk
+    is a *static-size* dynamic slice of window+Tq keys: SWA compute is
+    O(Sq * window) — the sub-quadratic path that makes long_500k viable.
+    """
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if hkv != hq:  # GQA: materialize kv per query head (kv tensors are small)
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = hd ** -0.5
+    chunk_q = min(chunk_q, sq)
+    while sq % chunk_q:      # largest divisor of sq not above the request
+        chunk_q -= 1
+    ncq = sq // chunk_q
+    offs = sk - sq  # decode-style alignment (query block ends at key end)
+
+    qc = q.reshape(b, hq, ncq, chunk_q, hd).transpose(2, 0, 1, 3, 4)
+
+    # static-size KV slice only makes sense for causal SWA (acausal window
+    # has no upper key bound); acausal callers fall back to masking
+    windowed = window is not None and causal and sk > window + chunk_q
+    if windowed:
+        kwin = window + chunk_q
+
+    def body(xs):
+        qi, i = xs                                   # [B,H,Tq,hd], scalar
+        q_pos = offs + i * chunk_q + jnp.arange(chunk_q)
+        if windowed:
+            start = jnp.clip(offs + i * chunk_q - window + 1, 0, sk - kwin)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kwin, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kwin, axis=2)
+            k_pos = start + jnp.arange(kwin)
+        else:
+            ks, vs = k, v
+            k_pos = jnp.arange(sk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, ks).astype(jnp.float32) * scale
+        mask = jnp.ones((chunk_q, k_pos.shape[0]), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vs.dtype), vs)
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(_, xs):
+        return None, body(xs)
+
+    _, out = jax.lax.scan(scan_body, None,
+                          (qc, jnp.arange(ncq, dtype=jnp.int32)))
+    # [ncq, B, H, Tq, hd] -> [B, H, Sq, hd]
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,       # [B, Hq, 1, hd]
+    k_cache: jax.Array, # [B, Hkv, S, hd]
+    v_cache: jax.Array, # [B, Hkv, S, hd]
+    valid_len: jax.Array | int,  # scalar or [B]: #valid cache entries
+) -> jax.Array:
+    """Single-token decode: one matvec over the cache (memory-bound)."""
+    b, hq, _, hd = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache).astype(jnp.float32)
+    scores *= hd ** -0.5
+    pos = jnp.arange(s)
+    vl = jnp.asarray(valid_len)
+    vl = vl[:, None, None, None] if vl.ndim else vl
+    scores = jnp.where(pos < vl, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache)
+    return out.reshape(b, hq, 1, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply (self / cross, train / decode)
+# ---------------------------------------------------------------------------
+
+
+def self_attention(
+    x: jax.Array,              # [B, S, d]
+    p: dict,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions: jax.Array,      # [B, S]
+    causal: bool = True,
+    window: int | None = None,
+    cache: tuple | None = None,   # (k_cache, v_cache, index) for decode
+    chunk_q: int = 512,
+    shard=lambda x, s: x,
+):
+    """Returns (out [B,S,d], new_cache or None)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, head_dim)
+    q = layers.rotary(q, positions).swapaxes(1, 2)   # [B, H, S, hd]
+    k = layers.rotary(k, positions).swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+    # NOTE (hillclimb-3, refuted hypothesis): pinning K/V sequence-
+    # replicated here to hoist the per-chunk gathers made every term WORSE
+    # (X 6.6->9.4s) — XLA's auto-chosen head x seq (4x4) attention layout
+    # beats forced KV replication.  Kept as a no-op plumbing point; see
+    # EXPERIMENTS.md §Perf iteration log.
+
+    if cache is not None:
+        k_cache, v_cache, idx = cache
+        slot = idx % k_cache.shape[2]   # ring buffer (identity if cache full-length)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=2)
+        valid = jnp.minimum(idx + 1, k_cache.shape[2])
+        out = decode_attention(q, k_cache, v_cache, valid)
+        new_cache = (k_cache, v_cache, idx + 1)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                chunk_q=chunk_q)
+        new_cache = (k, v)   # post-rotary K/V — prefill cache material
+
+    out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+def cross_attention(
+    x: jax.Array,          # [B, S, d]     text stream
+    memory: jax.Array,     # [B, M, d]     vision/audio embeddings
+    p: dict,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+):
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim).swapaxes(1, 2)
+    k = (memory @ p["wk"]).reshape(b, m, n_kv, head_dim).swapaxes(1, 2)
+    v = (memory @ p["wv"]).reshape(b, m, n_kv, head_dim).swapaxes(1, 2)
+    out = chunked_attention(q, k, v, causal=False, chunk_q=min(512, s))
+    out = out.swapaxes(1, 2).reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"]

@@ -1,0 +1,216 @@
+"""Single-token decode (serve) paths with per-family caches.
+
+Cache layout (stacked on the layer axis so the decode step scans layers):
+
+  dense/moe/audio : k/v caches [L, B, Hkv, S_cache, hd]
+  vlm             : self caches [n_super, ce-1, ...] (cross-attn K/V are
+                    recomputed from the static memory; precomputing them is
+                    a recorded optimization)
+  hybrid (zamba2) : mamba2 states [n_sb, per, B, H, ds, hd] + conv states +
+                    ONE shared-attn k/v cache (ring-buffered to 4096 beyond
+                    64k context — DESIGN.md §Arch-applicability)
+  ssm (xlstm)     : mLSTM matrix states + sLSTM (c, n, h, m) states
+
+Spec trees use the axis name "batch" on batch axes; the launcher substitutes
+the mesh batch axes (("pod","data") / ("data",)) before lowering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import attention, layers, ssm, transformer, xlstm
+from repro.nn.transformer import ArchConfig, NOSHARD, _mamba_meta, _mlstm_meta, _slstm_meta
+
+Array = jax.Array
+
+
+def _kv_cache(layers_shape, b, n_kv, s, hd, dtype):
+    # KV caches shard on the *sequence* axis ("kvseq" -> "model", or the
+    # whole mesh when the batch is unshardable, e.g. long_500k with B=1):
+    # GQA head counts (8) don't divide the model axis (16), sequence does.
+    shape = (*layers_shape, b, n_kv, s, hd)
+    zeros = jnp.zeros(shape, dtype)
+    spec = P(*(None,) * len(layers_shape), "batch", None, "kvseq", None)
+    return (zeros, zeros), ((spec, spec))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Returns (cache, specs)."""
+    fam, dt = cfg.family, cfg.param_dtype
+    if fam in ("dense", "moe", "audio"):
+        s_cache = min(max_len, cfg.window) if cfg.window else max_len
+        (k, v), (ks, vs) = _kv_cache((cfg.n_layers,), batch, cfg.n_kv,
+                                     s_cache, cfg.hd, dt)
+        return {"k": k, "v": v}, {"k": ks, "v": vs}
+
+    if fam == "vlm":
+        ce = cfg.cross_every
+        n_super = cfg.n_layers // ce
+        (k, v), (ks, vs) = _kv_cache((n_super, ce - 1), batch, cfg.n_kv,
+                                     max_len, cfg.hd, dt)
+        return {"k": k, "v": v}, {"k": ks, "v": vs}
+
+    if fam == "hybrid":
+        meta = _mamba_meta(cfg)
+        n_sb, per = cfg.n_layers // 6, 6
+        rest = cfg.n_layers - n_sb * per
+        h = jnp.zeros((n_sb, per, batch, meta["n_heads"], meta["d_state"],
+                       meta["head_dim"]), jnp.float32)
+        conv = jnp.zeros((n_sb, per, batch, meta["conv_width"] - 1,
+                          meta["d_inner"] + 2 * meta["d_state"]), dt)
+        hs = P(None, None, "batch", "model", None, None)
+        cs = P(None, None, "batch", None, "model")
+        cache = {"h": h, "conv": conv}
+        specs = {"h": hs, "conv": cs}
+        if rest:
+            cache["h_tail"] = jnp.zeros((rest, *h.shape[2:]), jnp.float32)
+            cache["conv_tail"] = jnp.zeros((rest, *conv.shape[2:]), dt)
+            specs["h_tail"] = P(None, "batch", "model", None, None)
+            specs["conv_tail"] = P(None, "batch", None, "model")
+        attn_len = max_len if max_len <= 65_536 else 4_096  # ring beyond 64k
+        # one KV history per superblock application (weights are shared,
+        # activations are not)
+        (k, v), (ks, vs) = _kv_cache((n_sb,), batch, cfg.n_kv, attn_len,
+                                     cfg.hd, dt)
+        cache["attn_k"], cache["attn_v"] = k, v
+        specs["attn_k"], specs["attn_v"] = ks, vs
+        return cache, specs
+
+    if fam == "ssm":
+        m_meta = _mlstm_meta(cfg)
+        s_meta = _slstm_meta(cfg)
+        per, n_sb = 8, cfg.n_layers // 8
+        C = jnp.zeros((n_sb, per - 1, batch, m_meta["n_heads"],
+                       m_meta["head_dim"] + 1, m_meta["head_dim"]), jnp.float32)
+        sl = jnp.zeros((n_sb, batch, s_meta["n_heads"], s_meta["head_dim"]),
+                       jnp.float32)
+        cache = {"C": C, "s_c": sl, "s_n": sl, "s_h": sl,
+                 "s_m": jnp.full_like(sl, -1e30)}
+        # xLSTM has only 4 heads: shard the (large) head_dim axis instead
+        cspec = P(None, None, "batch", None, None, "model")
+        sspec = P(None, "batch", None, "model")
+        specs = {"C": cspec, "s_c": sspec, "s_n": sspec, "s_h": sspec,
+                 "s_m": sspec}
+        return cache, specs
+
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# One decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, inputs: dict,
+                idx: Array, *, shard=NOSHARD):
+    """inputs: {"tokens" [B,1]} or {"embeddings" [B,1,d]} (+"memory" for vlm).
+
+    Returns (logits [B, vocab], new_cache)."""
+    fam = cfg.family
+    if cfg.emb_in():
+        x = inputs["embeddings"].astype(cfg.param_dtype)
+    else:
+        x = layers.embed(inputs["tokens"], params["embed"])
+    b = x.shape[0]
+    positions = jnp.full((b, 1), idx, jnp.int32)
+    new_cache = dict(cache)
+
+    if fam in ("dense", "moe", "audio"):
+        def body(x, xs):
+            lp, kc, vc = xs
+            x, (k2, v2, _) = transformer.attn_block(
+                x, lp, cfg, positions, shard=shard, cache=(kc, vc, idx))
+            return x, (k2, v2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=k_new, v=v_new)
+
+    elif fam == "vlm":
+        memory = inputs["memory"].astype(cfg.param_dtype)
+
+        def super_body(x, xs):
+            (self_p, cross_p), kc, vc = xs
+
+            def inner(x, xs2):
+                lp, k1, v1 = xs2
+                x, (k2, v2, _) = transformer.attn_block(
+                    x, lp, cfg, positions, shard=shard, cache=(k1, v1, idx))
+                return x, (k2, v2)
+
+            x, (k2, v2) = jax.lax.scan(inner, x, (self_p, kc, vc))
+            x, _ = transformer.attn_block(x, cross_p, cfg, positions,
+                                          shard=shard, memory=memory,
+                                          cross=True)
+            return x, (k2, v2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            super_body, x,
+            ((params["self_layers"], params["cross_layers"]),
+             cache["k"], cache["v"]))
+        new_cache.update(k=k_new, v=v_new)
+
+    elif fam == "hybrid":
+        meta = _mamba_meta(cfg)
+
+        def mamba_layer(x, xs):
+            lp, h, cv = xs
+            hnorm = layers.rms_norm(x, lp["norm"])
+            y, (h2, cv2) = ssm.mamba2(hnorm, lp["mamba"], meta,
+                                      state=h, conv_state=cv)
+            return x + y, (h2, cv2)
+
+        def super_body(x, xs):
+            ps, h, cv, ak, av = xs
+            x, (h2, cv2) = jax.lax.scan(mamba_layer, x, (ps, h, cv))
+            # shared attention block (weight-tied); ring cache handles the
+            # 4096-window long-context mode transparently
+            x, (ak2, av2, _) = transformer.attn_block(
+                x, params["shared_attn"], cfg, positions, shard=shard,
+                cache=(ak, av, idx))
+            return x, (h2, cv2, ak2, av2)
+
+        x, (h_new, conv_new, ak, av) = jax.lax.scan(
+            super_body, x,
+            (params["mamba_blocks"], cache["h"], cache["conv"],
+             cache["attn_k"], cache["attn_v"]))
+        new_cache.update(h=h_new, conv=conv_new, attn_k=ak, attn_v=av)
+        if "mamba_tail" in params:
+            x, (ht, cvt) = jax.lax.scan(
+                mamba_layer, x,
+                (params["mamba_tail"], cache["h_tail"], cache["conv_tail"]))
+            new_cache.update(h_tail=ht, conv_tail=cvt)
+
+    elif fam == "ssm":
+        m_meta = _mlstm_meta(cfg)
+        s_meta = _slstm_meta(cfg)
+
+        def m_layer(x, xs):
+            lp, C = xs
+            h = layers.rms_norm(x, lp["norm"])
+            y, C2 = xlstm.mlstm(h, lp["mix"], m_meta, state=C)
+            return x + y, C2
+
+        def super_body(x, xs):
+            mp, sp, C, sc, sn, sh, sm = xs
+            x, C2 = jax.lax.scan(m_layer, x, (mp, C))
+            h = layers.rms_norm(x, sp["norm"])
+            y, (sc2, sn2, sh2, sm2) = xlstm.slstm(h, sp["mix"], s_meta,
+                                                  state=(sc, sn, sh, sm))
+            return x + y, (C2, sc2, sn2, sh2, sm2)
+
+        x, (C_new, sc, sn, sh, sm) = jax.lax.scan(
+            super_body, x,
+            (params["mlstm_blocks"], params["slstm_blocks"], cache["C"],
+             cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"]))
+        new_cache.update(C=C_new, s_c=sc, s_n=sn, s_h=sh, s_m=sm)
+
+    else:
+        raise ValueError(fam)
+
+    h = layers.rms_norm(x, params["final_norm"])              # [B, 1, d]
+    unembed = params["head"].T if cfg.emb_in() else params["embed"]
+    logits = (h[:, 0] @ unembed.T).astype(jnp.float32)        # [B, V]
+    return logits, new_cache

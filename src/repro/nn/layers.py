@@ -1,0 +1,105 @@
+"""Basic layers: RMSNorm, rotary embeddings, FFN variants, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as pm
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Apply RoPE.  x: [B, S, H, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN (gated SiLU / squared-ReLU) — hidden dim sharded over "model"
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype, *, gated: bool = True,
+             fsdp: bool = False):
+    ks = jax.random.split(key, 3)
+    fa = ("data", "pod") if fsdp else None  # pod joins FSDP on multi-pod meshes
+    params = {
+        "w_up": pm.normal(ks[0], (d_model, d_ff), d_model ** -0.5, dtype),
+        "w_down": pm.normal(ks[1], (d_ff, d_model), d_ff ** -0.5, dtype),
+    }
+    specs = {"w_up": P(fa, "model"), "w_down": P("model", fa)}
+    if gated:
+        params["w_gate"] = pm.normal(ks[2], (d_model, d_ff), d_model ** -0.5, dtype)
+        specs["w_gate"] = P(fa, "model")
+    return params, specs
+
+
+def ffn(x: jax.Array, p: dict, *, gated: bool = True) -> jax.Array:
+    h = x @ p["w_up"]
+    if gated:
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jnp.square(jax.nn.relu(h))  # squared-ReLU (nemotron family)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab sharded over "model")
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    emb = pm.normal(key, (vocab, d_model), d_model ** -0.5, dtype)
+    return emb, P("model", None)
+
+
+def embed(tokens: jax.Array, emb: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def chunked_softmax_xent(
+    h: jax.Array,        # [B, S, d]  final hidden states
+    emb: jax.Array,      # [V, d]     tied unembedding
+    labels: jax.Array,   # [B, S]     int32
+    *,
+    chunk: int = 256,
+    batch_spec=None,
+) -> jax.Array:
+    """Mean next-token cross-entropy, computed in sequence chunks so the
+    [B, chunk, V] logits block is the peak — never the full [B, S, V]."""
+    b, s, d = h.shape
+    v = emb.shape[0]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    hc = h.reshape(b, s // chunk, chunk, d).swapaxes(0, 1)      # [C, B, c, d]
+    lc = labels.reshape(b, s // chunk, chunk).swapaxes(0, 1)    # [C, B, c]
+
+    def step(total, xs):
+        hx, lx = xs
+        logits = (hx @ emb.T).astype(jnp.float32)               # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lx[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return total + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch, EP.
+
+Dispatch avoids the O(T*E*C) one-hot tensor: tokens are argsorted by expert
+id and scattered into a fixed [E*C, d] buffer (C = capacity per expert), the
+expert matmuls run as one grouped einsum [E, C, d] x [E, d, ff], and results
+are combined back with the routing weights.
+
+Distribution (the hillclimb-1 result — see EXPERIMENTS.md §Perf): the
+dispatch runs *group-locally*.  Tokens are split into ``groups`` batches
+aligned with the data shards; each group routes/scatters its own tokens into
+its own [E, C_g, d] buffer with NO cross-device traffic, and the only
+collectives are the sharding-constraint boundaries around the expert einsum
+(batch-sharded dispatch buffer -> expert-sharded compute), which XLA lowers
+to all-to-alls of exactly the dispatched activations.  The naive global
+scatter instead lowered to per-layer all-reduces of the full [T*k, d]
+buffer — 35x more wire bytes (measured).
+
+Over-capacity tokens are dropped per group (per-shard capacity, the standard
+large-scale semantics); the auxiliary load-balancing loss is returned for
+the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as pm
+
+NOSHARD = lambda x, spec: x  # noqa: E731
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             *, fsdp: bool = False):
+    ks = jax.random.split(key, 4)
+    fa = ("data", "pod") if fsdp else None  # pod joins FSDP on multi-pod meshes
+    params = {
+        "router": pm.normal(ks[0], (d_model, n_experts), d_model ** -0.5,
+                            jnp.float32),
+        "w_up": pm.normal(ks[1], (n_experts, d_model, d_ff), d_model ** -0.5, dtype),
+        "w_gate": pm.normal(ks[2], (n_experts, d_model, d_ff), d_model ** -0.5, dtype),
+        "w_down": pm.normal(ks[3], (n_experts, d_ff, d_model), d_ff ** -0.5, dtype),
+    }
+    specs = {
+        "router": P(None, None),
+        "w_up": P("model", fa, None),
+        "w_gate": P("model", fa, None),
+        "w_down": P("model", None, fa),
+    }
+    return params, specs
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(cf * tokens * top_k / n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _route_group(x, router, *, top_k, capacity, n_experts):
+    """Group-local routing decisions (pure index math, no data movement).
+
+    Returns (sel = (perm_token, dest, weight, keep), aux)."""
+    t, d = x.shape
+    logits = x.astype(jnp.float32) @ router                  # [Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)               # [Tg, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # aux load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids[:, 0], n_experts, dtype=jnp.float32),
+                  axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    flat_ids = ids.reshape(-1)                               # [Tg*k]
+    flat_w = weights.reshape(-1)
+    token_of = jnp.repeat(jnp.arange(t), top_k)
+
+    order = jnp.argsort(flat_ids)                            # stable
+    sorted_ids = flat_ids[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(sorted_ids), sorted_ids,
+                                 num_segments=n_experts)
+    start = jnp.cumsum(counts) - counts                      # [E]
+    pos_in_expert = jnp.arange(t * top_k) - start[sorted_ids]
+    keep = pos_in_expert < capacity
+    dest = sorted_ids * capacity + jnp.where(keep, pos_in_expert, 0)
+    dest = jnp.where(keep, dest, n_experts * capacity)       # drop bucket
+
+    sel = (token_of[order], dest, flat_w[order], keep)
+    return sel, aux
+
+
+def _dispatch_group(x, token_ord, dest, *, rows):
+    """Group-local data movement: gather tokens in expert order and scatter
+    into the fixed dispatch buffer.  dest indices are unique within a group
+    by construction (position-in-expert), which lets XLA emit a plain
+    permuting scatter instead of a combining one."""
+    xs = x[token_ord]                                        # [Tg*k, d]
+    buf = jnp.zeros((rows, x.shape[1]), x.dtype)
+    return buf.at[dest].set(xs, unique_indices=True, mode="drop"), xs
+
+
+def _combine_group(down_flat, sel, t, d):
+    """down_flat [E*C+1, d] (with drop row); scatter back to tokens."""
+    token_ord, dest, w_ord, keep = sel
+    out_sorted = down_flat[dest] * (w_ord * keep)[:, None].astype(
+        down_flat.dtype)
+    return jnp.zeros((t, d), down_flat.dtype).at[token_ord].add(out_sorted)
+
+
+def moe_ffn(
+    x: jax.Array,            # [T, d]  flattened tokens
+    p: dict,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    groups: int = 1,
+    model_shards: int = 1,
+    shard=NOSHARD,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out [T, d], aux_loss scalar).
+
+    Two EP strategies are auto-selected (hillclimb-1, EXPERIMENTS.md §Perf):
+
+      gathered  when dispatched activations outweigh expert weights (olmoe:
+                40x) AND the weights fit HBM when replicated: tokens split
+                into one group per *device* (batch x model shards), every
+                group routes/dispatches/computes locally against all-gathered
+                expert weights (grads reduce-scatter back).  Zero activation
+                movement; wire ~ 2 x expert-weight bytes per layer.
+
+      a2a       otherwise (kimi: 34 GB of experts per layer cannot be
+                replicated): one group per batch shard; dispatch buffers
+                cross to the expert shards and back — wire ~ 2 x dispatched
+                activation bytes per layer.
+    """
+    t, d = x.shape
+    n_experts = p["router"].shape[1]
+    d_ff = p["w_up"].shape[-1]
+    e_bytes = 3 * n_experts * d * d_ff * p["w_up"].dtype.itemsize
+    t_bytes = t * top_k * d * x.dtype.itemsize * capacity_factor
+    gathered = e_bytes <= (1 << 30) and t_bytes > 4 * e_bytes
+
+    g = max(1, groups * (model_shards if gathered else 1))
+    while t % g:
+        g -= 1
+    tg = t // g
+    capacity = _capacity(tg, top_k, n_experts, capacity_factor)
+    group_spec = ("batch", "model") if gathered else "batch"
+
+    xg = shard(x.reshape(g, tg, d), P(group_spec, None, None))
+    sel, aux = jax.vmap(
+        lambda xl: _route_group(xl, p["router"], top_k=top_k,
+                                capacity=capacity, n_experts=n_experts))(xg)
+    rows = n_experts * capacity + 1
+    buf, _ = jax.vmap(
+        lambda xl, to, de: _dispatch_group(xl, to, de, rows=rows))(
+        xg, sel[0], sel[1])
+    he = buf[:, : n_experts * capacity].reshape(g, n_experts, capacity, d)
+
+    if gathered:
+        he = shard(he, P(group_spec, None, None, None))
+        w_up = shard(p["w_up"], P(None, None, None))
+        w_gate = shard(p["w_gate"], P(None, None, None))
+        w_down = shard(p["w_down"], P(None, None, None))
+    else:
+        he = shard(he, P(group_spec, "model", None, None))
+        w_up, w_gate, w_down = p["w_up"], p["w_gate"], p["w_down"]
+
+    up = jnp.einsum("gecd,edf->gecf", he, w_up)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", he, w_gate))
+    down = jnp.einsum("gecf,efd->gecd", up * gate, w_down)
+    # return path: outputs live with their token-owner shards for the
+    # combine (an expert-sharded buffer would lower the combine gather to
+    # masked all-reduces of the full [Tg*k, d] block)
+    down = shard(down, P(group_spec, None, None, None))
+
+    down_flat = down.reshape(g, n_experts * capacity, d)
+    down_flat = jnp.concatenate(
+        [down_flat, jnp.zeros((g, 1, d), down.dtype)], axis=1)  # drop row
+    out = jax.vmap(lambda df, s: _combine_group(df, s, tg, d))(down_flat, sel)
+    out = shard(out, P(group_spec, None, None))
+    return out.reshape(t, d), jnp.mean(aux)

@@ -1,0 +1,79 @@
+"""Parameter pytrees + PartitionSpec rules (no flax in this environment).
+
+Parameters are nested dicts of jnp arrays.  Every ``init_*`` function
+returns ``(params, specs)`` — two trees with identical structure, where the
+spec tree holds ``jax.sharding.PartitionSpec`` leaves.  Scanned layer stacks
+carry a leading layer axis (always unsharded: ``None`` first spec entry).
+
+Sharding rules (DESIGN.md §6):
+  vocab/embedding rows     -> "model"
+  attention heads          -> "model"
+  FFN hidden               -> "model"
+  MoE experts              -> "model"   (expert parallelism)
+  batch                    -> ("pod", "data") for sync; ("data",) within a
+                              pod for async-local (pod axis = replica axis)
+  optional FSDP            -> remaining large param axis over "data"
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict pytree
+Specs = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisNames:
+    pod: str | None = "pod"
+    data: str = "data"
+    model: str = "model"
+
+    @property
+    def batch_axes(self):
+        return (self.pod, self.data) if self.pod else (self.data,)
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def make_dense(key, d_in, d_out, dtype, in_spec=None, out_spec="model",
+               fsdp_axis=None):
+    """Weight [d_in, d_out] with the given axis sharding."""
+    w = normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+    spec = P(in_spec if in_spec is not None else fsdp_axis, out_spec)
+    return w, spec
+
+
+def make_norm(d, dtype):
+    return jnp.ones((d,), dtype), P(None)
+
+
+def stack_layers(pairs):
+    """Stack per-layer (params, specs) into scanned [L, ...] trees."""
+    params = [p for p, _ in pairs]
+    specs = pairs[0][1]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *params)
+    specs = jax.tree.map(
+        lambda s: P(None, *s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return stacked, specs
+
+
+def tree_specs_to_shardings(specs, mesh):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def eval_shape_params(init_fn, *args):
+    """Shape-only param init (for dry-runs: no host allocation)."""
+    return jax.eval_shape(init_fn, *args)

@@ -1,0 +1,162 @@
+"""Mamba2 (SSD) mixer — chunked-parallel training form + recurrent decode.
+
+State-space recurrence per head (A scalar per head, shared B/C projections):
+
+    h_t = exp(A * dt_t) * h_{t-1} + (dt_t * B_t) (x)otimes x_t
+    y_t = C_t . h_t + D * x_t
+
+Training uses the SSD chunked decomposition (Dao & Gu 2024): within a chunk
+of length Q the recurrence is a masked [Q, Q] matmul (MXU work); across
+chunks a lax.scan carries the O(1) state [H, d_state, d_head] — this is what
+makes ``long_500k`` run where quadratic attention cannot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as pm
+
+
+def init_mamba2(key, d_model: int, d_state: int, dtype, *,
+                expand: int = 2, head_dim: int = 64, conv_width: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    params = {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": pm.normal(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads),
+                          d_model ** -0.5, dtype),
+        "conv": pm.normal(ks[1], (conv_width, d_inner + 2 * d_state), 0.5, dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "w_out": pm.normal(ks[2], (d_inner, d_model), d_inner ** -0.5, dtype),
+    }
+    specs = {
+        "w_in": P(None, "model"),
+        "conv": P(None, "model"),
+        "dt_bias": P(None,),
+        "a_log": P(None,),
+        "d_skip": P(None,),
+        "w_out": P("model", None),
+    }
+    meta = dict(d_inner=d_inner, n_heads=n_heads, head_dim=head_dim,
+                d_state=d_state, conv_width=conv_width)
+    return params, specs, meta
+
+
+def _split_proj(xp, d_inner, d_state, n_heads):
+    z = xp[..., :d_inner]
+    xbc = xp[..., d_inner: 2 * d_inner + 2 * d_state]
+    dt = xp[..., 2 * d_inner + 2 * d_state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, *, state=None):
+    """Depthwise causal conv1d.  xbc [B,S,C]; conv_w [W,C].
+
+    With ``state`` ([B, W-1, C], decode path) returns (y, new_state)."""
+    w = conv_w.shape[0]
+    if state is not None:
+        buf = jnp.concatenate([state, xbc], axis=1)       # [B, W-1+S, C]
+        new_state = buf[:, -(w - 1):, :]
+    else:
+        buf = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = None
+    ys = sum(buf[:, i: i + xbc.shape[1], :] * conv_w[i] for i in range(w))
+    return jax.nn.silu(ys), new_state
+
+
+def mamba2(
+    x: jax.Array,      # [B, S, d_model]
+    p: dict,
+    meta: dict,
+    *,
+    chunk: int = 256,
+    state: jax.Array | None = None,     # decode: [B, H, d_state, d_head]
+    conv_state: jax.Array | None = None,
+):
+    """Returns (y [B,S,d_model], (state, conv_state) if decoding else None)."""
+    b, s, _ = x.shape
+    di, nh, hd, ds = (meta["d_inner"], meta["n_heads"], meta["head_dim"],
+                      meta["d_state"])
+    xp = x @ p["w_in"]
+    z, xbc, dt = _split_proj(xp, di, ds, nh)
+    decode = state is not None
+    xbc_raw = xbc
+    xbc, new_conv = _causal_conv(xbc, p["conv"],
+                                 state=conv_state if decode else None)
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    Bm = xbc[..., di: di + ds]                            # [B,S,ds]
+    Cm = xbc[..., di + ds:]                               # [B,S,ds]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                              # [H] (negative)
+    log_decay = a * dt                                    # [B,S,H]
+
+    if decode:  # s == 1: one recurrence step
+        dec = jnp.exp(log_decay)[:, 0, :, None, None]     # [B,H,1,1]
+        dbx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], Bm[:, 0],
+                         xs[:, 0].astype(jnp.float32))
+        new_state = dec * state + dbx
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), new_state)
+        y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        out = (y * jax.nn.silu(z)) @ p["w_out"]
+        return out, (new_state, new_conv)
+
+    # ---- chunked SSD ----
+    chunk = min(chunk, s)
+    while s % chunk:         # largest divisor of s not above the request
+        chunk -= 1
+    nchunk = s // chunk
+
+    def reshape_c(t):  # [B,S,...] -> [C, B, Q, ...]
+        return t.reshape(b, nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, B_c, C_c = map(reshape_c, (xs, Bm, Cm))
+    ld_c = reshape_c(log_decay)                           # [C,B,Q,H]
+    dt_c = reshape_c(dt)
+
+    h0 = jnp.zeros((b, nh, ds, hd), jnp.float32)
+
+    def step(h, xs_):
+        xq, Bq, Cq, ldq, dtq = xs_                        # per-chunk blocks
+        # cumulative decays (fp32)
+        Lq = jnp.cumsum(ldq, axis=1)                      # [B,Q,H]
+        # intra-chunk: scores[t,s] = C_t.B_s * exp(L_t - L_s) * dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))           # [B,Q,Q]
+        ldiff = Lq[:, :, None, :] - Lq[:, None, :, :]     # [B,Q,Q,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        scores = cb[..., None] * m * dtq[:, None, :, :]   # [B,t,s,H]
+        y = jnp.einsum("btsh,bshp->bthp", scores, xq.astype(jnp.float32))
+        # inter-chunk: y += C_t . (exp(L_t) h_in)
+        y += jnp.einsum("btn,bhnp,bth->bthp", Cq.astype(jnp.float32), h,
+                        jnp.exp(Lq))
+        # state update: h_out = exp(L_Q) h_in + sum_s exp(L_Q - L_s) dt_s B_s x_s
+        last = Lq[:, -1:, :]                              # [B,1,H]
+        w_s = jnp.exp(last - Lq) * dtq                    # [B,Q,H]
+        h_new = (jnp.exp(last[:, 0, :])[:, :, None, None] * h +
+                 jnp.einsum("bsh,bsn,bshp->bhnp", w_s, Bq.astype(jnp.float32),
+                            xq.astype(jnp.float32)))
+        y = y + p["d_skip"][None, None, :, None] * xq.astype(jnp.float32)
+        return h_new, y.astype(x.dtype)
+
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, ys = jax.lax.scan(step, h0, (xs_c, B_c, C_c, ld_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    # final recurrent state + conv history -> decoding can continue from here
+    conv_tail = xbc_raw[:, -(p["conv"].shape[0] - 1):, :]
+    return (y * jax.nn.silu(z)) @ p["w_out"], (h_last, conv_tail)
+
+
+def init_decode_state(b, meta, dtype=jnp.float32):
+    h = jnp.zeros((b, meta["n_heads"], meta["d_state"], meta["head_dim"]),
+                  jnp.float32)
+    conv = jnp.zeros((b, meta["conv_width"] - 1,
+                      meta["d_inner"] + 2 * meta["d_state"]), dtype)
+    return h, conv

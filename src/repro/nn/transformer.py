@@ -1,0 +1,378 @@
+"""Model assembly: per-family blocks + scan-over-layers forward passes.
+
+Families (ARCHITECTURES block):
+  dense    pre-norm GQA attention + FFN (gated-SiLU or squared-ReLU)
+  moe      attention + top-k expert FFN
+  audio    dense backbone over precomputed frame embeddings (stub frontend)
+  hybrid   Mamba2 backbone + periodically-applied *shared* attention block
+  ssm      xLSTM: scanned superblocks of (7 mLSTM + 1 sLSTM)
+  vlm      dense decoder + cross-attention to patch embeddings every 5 layers
+
+All families scan over (stacks of) layers so HLO size is depth-independent,
+apply jax.checkpoint to the scanned body (remat), and thread a ``shard``
+callback for activation sharding constraints (sequence parallelism etc.).
+Decode paths carry per-layer caches/states stacked on the layer axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import attention, layers, moe, param as pm, ssm, xlstm
+
+Array = jax.Array
+NOSHARD = lambda x, spec: x  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | audio | hybrid | ssm | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    # family extras
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_groups: int = 0         # group-local dispatch (0 -> single group)
+    moe_model_shards: int = 1   # model-axis size (gathered-experts groups)
+    ssm_state: int = 0
+    window: int | None = None   # sliding-window attention
+    cross_every: int = 0        # vlm: one cross-attn layer per this many
+    n_memory: int = 0           # vlm/audio: #frontend embeddings
+    ffn_gated: bool = True
+    fsdp: bool = False
+    seq_shard: bool = False     # sequence-parallel residual stream
+    param_dtype: Any = jnp.bfloat16
+    head_dim: int = 0
+    attn_chunk: int = 1024      # kv chunk for chunked attention
+    loss_chunk: int = 256       # sequence chunk for the xent loss
+    ssm_chunk: int = 256
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def emb_in(self) -> bool:
+        """True if the input is precomputed embeddings (stub frontend)."""
+        return self.family == "audio"
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM blocks
+# ---------------------------------------------------------------------------
+
+
+def init_attn_block(cfg: ArchConfig, key, *, with_moe=False, cross=False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn_p, attn_s = attention.init_attention(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, cfg.param_dtype,
+        fsdp=cfg.fsdp)
+    n1, n1s = pm.make_norm(cfg.d_model, cfg.param_dtype)
+    n2, n2s = pm.make_norm(cfg.d_model, cfg.param_dtype)
+    params = {"attn": attn_p, "norm1": n1, "norm2": n2}
+    specs = {"attn": attn_s, "norm1": n1s, "norm2": n2s}
+    if with_moe:
+        m_p, m_s = moe.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                                cfg.param_dtype, fsdp=cfg.fsdp)
+        params["moe"], specs["moe"] = m_p, m_s
+    else:
+        f_p, f_s = layers.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                                   gated=cfg.ffn_gated, fsdp=cfg.fsdp)
+        params["ffn"], specs["ffn"] = f_p, f_s
+    return params, specs
+
+
+def attn_block(
+    x, p, cfg: ArchConfig, positions, *, shard=NOSHARD, cache=None,
+    memory=None, cross=False,
+):
+    """Pre-norm block.  Returns (x, new_cache)."""
+    h = layers.rms_norm(x, p["norm1"])
+    if cross:
+        a = attention.cross_attention(
+            h, memory, p["attn"], n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.hd)
+        new_cache = cache
+    else:
+        a, new_cache = attention.self_attention(
+            h, p["attn"], n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, causal=True, window=cfg.window, cache=cache,
+            chunk_q=cfg.attn_chunk, shard=shard)
+    x = shard(x + a, P("batch", "seq", None))
+    h = layers.rms_norm(x, p["norm2"])
+    if "moe" in p:
+        b, s, d = h.shape
+        out, aux = moe.moe_ffn(h.reshape(b * s, d), p["moe"],
+                               top_k=cfg.moe_top_k,
+                               groups=cfg.moe_groups or 1,
+                               model_shards=cfg.moe_model_shards, shard=shard)
+        f = out.reshape(b, s, d)
+    else:
+        f = layers.ffn(h, p["ffn"], gated=cfg.ffn_gated)
+    x = shard(x + f, P("batch", "seq", None))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (all families)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key):
+    """Returns (params, specs)."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: dict = {}
+    specs: dict = {}
+
+    if not cfg.emb_in():
+        emb, emb_s = layers.init_embed(keys[-1], cfg.vocab, cfg.d_model,
+                                       cfg.param_dtype)
+        params["embed"], specs["embed"] = emb, emb_s
+    else:  # stub frontend: separate output head over the small codec vocab
+        head = pm.normal(keys[-1], (cfg.d_model, cfg.vocab),
+                         cfg.d_model ** -0.5, cfg.param_dtype)
+        params["head"], specs["head"] = head, P(None, "model")
+
+    fnorm, fnorm_s = pm.make_norm(cfg.d_model, cfg.param_dtype)
+    params["final_norm"], specs["final_norm"] = fnorm, fnorm_s
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        pairs = [init_attn_block(cfg, keys[i]) for i in range(cfg.n_layers)]
+        params["layers"], specs["layers"] = pm.stack_layers(pairs)
+
+    elif fam == "moe":
+        pairs = [init_attn_block(cfg, keys[i], with_moe=True)
+                 for i in range(cfg.n_layers)]
+        params["layers"], specs["layers"] = pm.stack_layers(pairs)
+
+    elif fam == "vlm":
+        ce = cfg.cross_every
+        n_super = cfg.n_layers // ce
+        self_pairs = [init_attn_block(cfg, keys[i])
+                      for i in range(n_super * (ce - 1))]
+        ck = jax.random.split(keys[-2], n_super)
+        cross_pairs = [init_attn_block(cfg, ck[i], cross=True)
+                       for i in range(n_super)]
+        # restack: [n_super, ce-1, ...] for the two-level scan
+        sp, ss_ = pm.stack_layers(self_pairs)
+        sp = jax.tree.map(
+            lambda x: x.reshape(n_super, ce - 1, *x.shape[1:]), sp)
+        ss_ = jax.tree.map(lambda s: P(None, *s) if isinstance(s, P) else s,
+                           ss_, is_leaf=lambda x: isinstance(x, P))
+        cp, cs = pm.stack_layers(cross_pairs)
+        params["self_layers"], specs["self_layers"] = sp, ss_
+        params["cross_layers"], specs["cross_layers"] = cp, cs
+
+    elif fam == "hybrid":  # zamba2: mamba backbone + one shared attn block
+        n_sb, per = cfg.n_layers // 6, 6          # 6 superblocks of 6 + rest
+        rest = cfg.n_layers - n_sb * per
+        mk = jax.random.split(keys[0], cfg.n_layers)
+        pairs = []
+        for i in range(cfg.n_layers):
+            p_, s_, meta = ssm.init_mamba2(mk[i], cfg.d_model, cfg.ssm_state,
+                                           cfg.param_dtype)
+            n_, ns_ = pm.make_norm(cfg.d_model, cfg.param_dtype)
+            pairs.append(({"mamba": p_, "norm": n_},
+                          {"mamba": s_, "norm": ns_}))
+        main, main_s = pm.stack_layers(pairs[: n_sb * per])
+        main = jax.tree.map(lambda x: x.reshape(n_sb, per, *x.shape[1:]), main)
+        main_s = jax.tree.map(lambda s: P(None, *s) if isinstance(s, P) else s,
+                              main_s, is_leaf=lambda x: isinstance(x, P))
+        params["mamba_blocks"], specs["mamba_blocks"] = main, main_s
+        if rest:
+            tail, tail_s = pm.stack_layers(pairs[n_sb * per:])
+            params["mamba_tail"], specs["mamba_tail"] = tail, tail_s
+        shared, shared_s = init_attn_block(cfg, keys[1])
+        params["shared_attn"], specs["shared_attn"] = shared, shared_s
+
+    elif fam == "ssm":  # xLSTM: superblocks of (7 mLSTM + 1 sLSTM)
+        per, n_sb = 8, cfg.n_layers // 8
+        m_pairs, s_pairs = [], []
+        mk = jax.random.split(keys[0], cfg.n_layers)
+        for sb in range(n_sb):
+            for j in range(per - 1):
+                p_, s_, _ = xlstm.init_mlstm(mk[sb * per + j], cfg.d_model,
+                                             cfg.n_heads, cfg.param_dtype)
+                n_, ns_ = pm.make_norm(cfg.d_model, cfg.param_dtype)
+                m_pairs.append(({"mix": p_, "norm": n_},
+                                {"mix": s_, "norm": ns_}))
+            p_, s_, _ = xlstm.init_slstm(mk[sb * per + per - 1], cfg.d_model,
+                                         cfg.n_heads, cfg.param_dtype)
+            n_, ns_ = pm.make_norm(cfg.d_model, cfg.param_dtype)
+            s_pairs.append(({"mix": p_, "norm": n_}, {"mix": s_, "norm": ns_}))
+        mp, ms = pm.stack_layers(m_pairs)
+        mp = jax.tree.map(lambda x: x.reshape(n_sb, per - 1, *x.shape[1:]), mp)
+        ms = jax.tree.map(lambda s: P(None, *s) if isinstance(s, P) else s,
+                          ms, is_leaf=lambda x: isinstance(x, P))
+        sp, ss_ = pm.stack_layers(s_pairs)
+        params["mlstm_blocks"], specs["mlstm_blocks"] = mp, ms
+        params["slstm_blocks"], specs["slstm_blocks"] = sp, ss_
+
+    else:
+        raise ValueError(cfg.family)
+
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill): returns final hidden states [B, S, d]
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params, cfg: ArchConfig, inputs: dict, *, shard: Callable = NOSHARD,
+    mode: str = "train",
+):
+    """inputs: {"tokens" | "embeddings", optional "memory" [B,M,d]}.
+
+    mode="train"   -> returns final hidden states [B, S, d]
+    mode="prefill" -> returns (hidden, cache) where cache matches
+                      decode.init_cache's structure (ready for decode_step).
+    """
+    prefill = mode == "prefill"
+    if cfg.emb_in():
+        x = inputs["embeddings"].astype(cfg.param_dtype)
+    else:
+        x = layers.embed(inputs["tokens"], params["embed"])
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard(x, P("batch", "seq", None))
+    fam = cfg.family
+    cache = {}
+
+    def ckpt(f):
+        if prefill:
+            return f
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if fam in ("dense", "moe", "audio"):
+        @ckpt
+        def body(x, layer_p):
+            x, kv = attn_block(x, layer_p, cfg, positions, shard=shard)
+            return x, (kv if prefill else None)
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        if prefill:
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif fam == "vlm":
+        memory = inputs["memory"].astype(cfg.param_dtype)
+
+        @ckpt
+        def super_body(x, ps):
+            self_p, cross_p = ps
+
+            def inner(x, lp):
+                x, kv = attn_block(x, lp, cfg, positions, shard=shard)
+                return x, (kv if prefill else None)
+
+            x, kvs = jax.lax.scan(inner, x, self_p)
+            x, _ = attn_block(x, cross_p, cfg, positions, shard=shard,
+                              memory=memory, cross=True)
+            return x, kvs
+
+        x, kvs = jax.lax.scan(
+            super_body, x, (params["self_layers"], params["cross_layers"]))
+        if prefill:
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif fam == "hybrid":
+        meta = _mamba_meta(cfg)
+        shared_p = params["shared_attn"]
+
+        def mamba_layer(x, lp):
+            h = layers.rms_norm(x, lp["norm"])
+            y, st = ssm.mamba2(h, lp["mamba"], meta, chunk=cfg.ssm_chunk)
+            return (shard(x + y, P("batch", "seq", None)),
+                    st if prefill else None)
+
+        @ckpt
+        def super_body(x, ps):
+            x, sts = jax.lax.scan(mamba_layer, x, ps)
+            x, kv = attn_block(x, shared_p, cfg, positions, shard=shard)
+            return x, ((sts, kv) if prefill else None)
+
+        x, ys = jax.lax.scan(super_body, x, params["mamba_blocks"])
+        if prefill:
+            (h_st, cv_st), kvs = ys
+            cache = {"h": h_st, "conv": cv_st.astype(cfg.param_dtype),
+                     "attn_k": kvs[0], "attn_v": kvs[1]}
+        if "mamba_tail" in params:
+            x, tail = jax.lax.scan(mamba_layer, x, params["mamba_tail"])
+            if prefill:
+                cache["h_tail"] = tail[0]
+                cache["conv_tail"] = tail[1].astype(cfg.param_dtype)
+
+    elif fam == "ssm":
+        m_meta = _mlstm_meta(cfg)
+        s_meta = _slstm_meta(cfg)
+
+        @ckpt
+        def super_body(x, ps):
+            mp, sp = ps
+
+            def m_layer(x, lp):
+                h = layers.rms_norm(x, lp["norm"])
+                y, C = xlstm.mlstm(h, lp["mix"], m_meta, chunk=cfg.ssm_chunk)
+                return (shard(x + y, P("batch", "seq", None)),
+                        C if prefill else None)
+
+            x, Cs = jax.lax.scan(m_layer, x, mp)
+            h = layers.rms_norm(x, sp["norm"])
+            y, st = xlstm.slstm(h, sp["mix"], s_meta)
+            return (shard(x + y, P("batch", "seq", None)),
+                    (Cs, st) if prefill else None)
+
+        x, ys = jax.lax.scan(
+            super_body, x, (params["mlstm_blocks"], params["slstm_blocks"]))
+        if prefill:
+            Cs, (sc, sn, sh, sm) = ys
+            cache = {"C": Cs, "s_c": sc, "s_n": sn, "s_h": sh, "s_m": sm}
+
+    else:
+        raise ValueError(fam)
+
+    h = layers.rms_norm(x, params["final_norm"])
+    return (h, cache) if prefill else h
+
+
+def _mamba_meta(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    return dict(d_inner=d_inner, n_heads=d_inner // 64, head_dim=64,
+                d_state=cfg.ssm_state, conv_width=4)
+
+
+def _mlstm_meta(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    return dict(d_inner=d_inner, n_heads=cfg.n_heads,
+                head_dim=d_inner // cfg.n_heads)
+
+
+def _slstm_meta(cfg: ArchConfig):
+    return dict(n_heads=cfg.n_heads, head_dim=cfg.d_model // cfg.n_heads)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *,
+            shard: Callable = NOSHARD) -> Array:
+    """Mean next-token cross-entropy (tied embeddings; chunked logits)."""
+    h = forward(params, cfg, batch, shard=shard)
+    unembed = params["head"].T if cfg.emb_in() else params["embed"]
+    return layers.chunked_softmax_xent(
+        h, unembed, batch["labels"], chunk=cfg.loss_chunk)

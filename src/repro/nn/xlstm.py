@@ -1,0 +1,200 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) + sLSTM (scalar
+memory, sequential scan with exponential gating).
+
+mLSTM is linear attention with per-step scalar forget/input gates:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix state  [dv, dk])
+    n_t = f_t n_{t-1} + i_t k_t              (normalizer    [dk])
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+Training uses the same chunked decomposition as SSD (ssm.py): intra-chunk
+masked [Q, Q] matmuls + O(1) carried state, so xLSTM runs the ``long_500k``
+shape.  The normalizer rides along as an extra value column.  We use
+f = sigmoid(f~), i = exp(min(i~, 8)) — bounded gates instead of the paper's
+running-max stabilizer (simplification recorded in DESIGN.md).
+
+sLSTM keeps per-head recurrent weights and exponential gating with the
+running-max stabilizer, scanned over time (inherently sequential — the
+paper's own characterization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import param as pm
+from repro.nn import layers
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype, *, proj_factor: int = 2):
+    d_inner = proj_factor * d_model
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_up": pm.normal(ks[0], (d_model, 2 * d_inner), d_model ** -0.5, dtype),
+        "w_qkv": pm.normal(ks[1], (d_inner, 3 * d_inner), d_inner ** -0.5, dtype),
+        "w_gates": pm.normal(ks[2], (d_inner, 2 * n_heads), d_inner ** -0.5,
+                             jnp.float32),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]  # i~, f~ init
+        ),
+        "w_down": pm.normal(ks[3], (d_inner, d_model), d_inner ** -0.5, dtype),
+    }
+    specs = {
+        # w_qkv column-parallel (output/head_dim sharded): its input-sharded
+        # row-parallel form psum'd an 800 MB [B,S,3*d_inner] block per layer
+        # (hillclimb-2 iteration 5; w_down stays row-parallel — its psum of
+        # [B,S,d_model] is the standard Megatron reduce)
+        "w_up": P(None, "model"), "w_qkv": P(None, "model"),
+        "w_gates": P("model", None), "gate_bias": P(None,),
+        "w_down": P("model", None),
+    }
+    meta = dict(d_inner=d_inner, n_heads=n_heads, head_dim=hd)
+    return params, specs, meta
+
+
+def mlstm(x, p, meta, *, chunk: int = 256, state=None):
+    """x [B,S,d]; state (decode): (C [B,H,dv+1,dk], ) ; returns (y, state')."""
+    b, s, _ = x.shape
+    nh, hd = meta["n_heads"], meta["head_dim"]
+    di = meta["d_inner"]
+    up = x @ p["w_up"]
+    xi, z = up[..., :di], up[..., di:]
+    qkv = xi @ p["w_qkv"]
+    q = qkv[..., :di].reshape(b, s, nh, hd)
+    k = qkv[..., di: 2 * di].reshape(b, s, nh, hd) * (hd ** -0.5)
+    v = qkv[..., 2 * di:].reshape(b, s, nh, hd)
+    gates = xi @ p["w_gates"] + p["gate_bias"]
+    i_g = jnp.exp(jnp.minimum(gates[..., :nh].astype(jnp.float32), 8.0))
+    log_f = jax.nn.log_sigmoid(gates[..., nh:].astype(jnp.float32))  # [B,S,H]
+
+    # augment v with ones column -> normalizer rides in the state
+    # (kept in the native activation dtype: intra-chunk matmuls run bf16 in
+    # production with fp32 accumulation — hillclimb-2 iteration 3)
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((b, s, nh, 1), v.dtype)], axis=-1)   # [B,S,H,hd+1]
+
+    if state is not None:  # decode: single recurrence step
+        C = state                                          # [B,H,hd+1,hd]
+        dec = jnp.exp(log_f)[:, 0, :, None, None]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", i_g[:, 0], v_aug[:, 0],
+                         k[:, 0].astype(jnp.float32))
+        C = dec * C + upd
+        hq = jnp.einsum("bhpn,bhn->bhp", C, q[:, 0].astype(jnp.float32))
+        y, n_dot = hq[..., :hd], hq[..., hd]
+        y = y / jnp.maximum(jnp.abs(n_dot), 1.0)[..., None]
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        out = (y * jax.nn.silu(z)) @ p["w_down"]
+        return out, C
+
+    chunk = min(chunk, s)
+    while s % chunk:         # largest divisor of s not above the request
+        chunk -= 1
+    nchunk = s // chunk
+
+    # one layout change per tensor up front: everything in the chunk body
+    # lives in [B, H, Q, *] so no einsum needs a transposed operand
+    # (hillclimb-2: the mixed-layout body spent ~50% of its HBM traffic on
+    # transpose copies — EXPERIMENTS.md §Perf)
+    def rc(t):  # [B,S,H,*] or [B,S,H] -> [C, B, H, Q, *]
+        t = t.reshape(b, nchunk, chunk, *t.shape[2:])
+        perm = (1, 0, 3, 2, *range(4, t.ndim))
+        return t.transpose(perm)
+
+    qc, kc, vc = map(rc, (q, k, v_aug))                    # [C,B,H,Q,n/p]
+    ic, lfc = map(rc, (i_g, log_f))                        # [C,B,H,Q]
+    C0 = jnp.zeros((b, nh, hd + 1, hd), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(C, xs_):
+        qq, kk, vv, ii, lf = xs_                           # [B,H,Q,*] native
+        acc = jnp.float32
+        Lq = jnp.cumsum(lf, axis=2)                        # [B,H,Q] fp32
+        qk = jnp.einsum("bhtn,bhsn->bhts", qq, kk,
+                        preferred_element_type=acc)
+        ldiff = Lq[:, :, :, None] - Lq[:, :, None, :]      # [B,H,t,s]
+        m = jnp.where(tri[None, None], jnp.exp(ldiff), 0.0)
+        scores = qk * m * ii[:, :, None, :]                # i_s weight
+        h = jnp.einsum("bhts,bhsp->bhtp", scores.astype(vv.dtype), vv,
+                       preferred_element_type=acc)
+        h += jnp.einsum("bhtn,bhpn->bhtp", qq, C.astype(qq.dtype),
+                        preferred_element_type=acc) * jnp.exp(Lq)[..., None]
+        last = Lq[:, :, -1:]
+        w_s = jnp.exp(last - Lq) * ii                      # [B,H,Q]
+        C_new = (jnp.exp(last[..., 0])[:, :, None, None] * C +
+                 jnp.einsum("bhsp,bhsn->bhpn",
+                            vv * w_s[..., None].astype(vv.dtype), kk,
+                            preferred_element_type=acc))
+        y, n_dot = h[..., :hd], h[..., hd]
+        y = y / jnp.maximum(jnp.abs(n_dot), 1.0)[..., None]
+        return C_new, y.astype(x.dtype)                    # y [B,H,Q,p]
+
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    C_last, ys = jax.lax.scan(step, C0, (qc, kc, vc, ic, lfc))
+    # [C,B,H,Q,p] -> [B, S, H*p] in one transpose
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, di)
+    return (y * jax.nn.silu(z)) @ p["w_down"], C_last
+
+
+def init_mlstm_state(b, meta):
+    return jnp.zeros((b, meta["n_heads"], meta["head_dim"] + 1,
+                      meta["head_dim"]), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_x": pm.normal(ks[0], (d_model, 4 * d_model), d_model ** -0.5, dtype),
+        "r_h": pm.normal(ks[1], (n_heads, hd, 4 * hd), hd ** -0.5, dtype),
+        "bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "w_out": pm.normal(ks[2], (d_model, d_model), d_model ** -0.5, dtype),
+    }
+    specs = {"w_x": P(None, "model"), "r_h": P(None, None, "model"),
+             "bias": P(None,), "w_out": P("model", None)}
+    meta = dict(n_heads=n_heads, head_dim=hd)
+    return params, specs, meta
+
+
+def slstm(x, p, meta, *, state=None):
+    """x [B,S,d].  state: (c, n, h, m) each [B,H,hd].  Sequential scan."""
+    b, s, d = x.shape
+    nh, hd = meta["n_heads"], meta["head_dim"]
+    xz = (x @ p["w_x"] + p["bias"].astype(x.dtype))        # [B,S,4d]
+    xz = xz.reshape(b, s, 4, nh, hd).swapaxes(0, 1)        # [S,B,4,H,hd]
+
+    if state is None:
+        zeros = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, nh, hd), -1e30))
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhi,hij->bhj", h.astype(x.dtype), p["r_h"])
+        rec = rec.reshape(b, nh, 4, hd).swapaxes(1, 2)     # [B,4,H,hd]
+        pre = (xt + rec).astype(jnp.float32)               # [B,4,H,hd]
+        z_t = jnp.tanh(pre[:, 0])
+        i_t, f_t = pre[:, 1], pre[:, 2]
+        o_t = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)                  # stabilizer
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new.astype(x.dtype)
+
+    new_state, hs = jax.lax.scan(step, state, xz)
+    y = hs.swapaxes(0, 1).reshape(b, s, d)                 # [B,S,d]
+    return y @ p["w_out"], new_state

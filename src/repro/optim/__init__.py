@@ -1,0 +1,3 @@
+from repro.optim.sgd import sgd, sgd_momentum  # noqa: F401
+from repro.optim.adam import adam  # noqa: F401
+from repro.optim import schedules, clip, compress  # noqa: F401

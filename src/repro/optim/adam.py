@@ -1,0 +1,35 @@
+"""Adam (for the LM example applications; the paper study itself uses SGD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer, _to_schedule
+
+
+def adam(lr, b1=0.9, b2=0.95, eps=1e-8, *, state_dtype=jnp.float32) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=state_dtype)  # noqa: E731
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(mi.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(vi.dtype)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda mi, vi: (-lr_t * (mi / bc1) /
+                            (jnp.sqrt(vi / bc2) + eps)),
+            m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adam")

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (step-decay is the paper's diminishing-step rule)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time(lr0: float, decay: float = 0.01):
+    """alpha_t = alpha_0 / (1 + decay * t) — classic Robbins-Monro-style."""
+    return lambda step: lr0 / (1.0 + decay * step.astype(jnp.float32))
+
+
+def cosine(lr0: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr0 * warm * cos
+    return f

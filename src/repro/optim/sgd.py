@@ -1,0 +1,70 @@
+"""SGD (the paper's optimizer) — plain and momentum variants.
+
+Optimizer protocol (optax-like but dependency-free):
+
+    opt = sgd(lr)
+    state = opt.init(params)               # pytree (possibly empty)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str = "opt"
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _to_schedule(lr):
+    if callable(lr):
+        return lr
+    return lambda step: lr
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD: u = -lr * g.  State = step counter only."""
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = sched(step)
+        updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def sgd_momentum(lr, momentum: float = 0.9, *, state_dtype=None) -> Optimizer:
+    """SGD with (optionally low-precision) momentum buffers."""
+    sched = _to_schedule(lr)
+
+    def init(params):
+        m = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=state_dtype or p.dtype), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": m}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = sched(step)
+        m = jax.tree.map(
+            lambda mi, g: (momentum * mi + g).astype(mi.dtype),
+            state["m"], grads)
+        updates = jax.tree.map(lambda mi: -lr_t * mi, m)
+        return updates, {"step": step + 1, "m": m}
+
+    return Optimizer(init, update, "sgd_momentum")

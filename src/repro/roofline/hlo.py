@@ -1,0 +1,364 @@
+"""Post-SPMD HLO text parser for roofline terms.
+
+Why parsing instead of ``compiled.cost_analysis()``: XLA's cost analysis
+counts every while-loop body ONCE (verified empirically — see
+EXPERIMENTS.md §Methodology), and all our models scan over layers/chunks,
+so its FLOPs are off by the trip counts.  The partitioned HLO text instead
+carries explicit ``known_trip_count`` backend configs, per-op output shapes
+and collective replica groups, from which we reconstruct:
+
+  * dot FLOPs x loop-trip multipliers  (compute term; per-device shapes)
+  * per-op HBM traffic proxy           (memory term; post-fusion top level)
+  * collective wire bytes per device   (collective term; ring formulas)
+
+All shapes in the partitioned module are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+               "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+               "u64": 8, "c64": 8, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"(?:true_computation|false_computation|"
+                          r"branch_computations=\{)[^,}]*")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str            # everything after the opening '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list            # list[Op]
+    symbols: dict        # op name -> type_str
+
+
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        hdr = _COMP_HDR_RE.match(stripped)
+        if hdr and stripped.endswith("{"):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if m:
+            name, type_str, kind, rest = m.groups()
+            cur.ops.append(Op(name, type_str, kind, rest))
+            cur.symbols[name] = type_str
+    return comps
+
+
+def _entry_name(comps: dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    # fallback: computation not called by anyone
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for rx in (_CALLS_RE, _BODY_RE, _COND_RE):
+                mm = rx.search(op.rest)
+                if mm:
+                    called.add(mm.group(1))
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def compute_multipliers(comps: dict[str, Computation], entry: str
+                        ) -> dict[str, float]:
+    """multiplier[c] = expected executions of computation c per step."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # topological-ish propagation: iterate until fixpoint (call graphs are
+    # DAGs in HLO, a few passes suffice)
+    for _ in range(32):
+        changed = False
+        for cname, comp in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for op in comp.ops:
+                trips = 1.0
+                tm = _TRIP_RE.search(op.rest)
+                if op.kind == "while":
+                    trips = float(tm.group(1)) if tm else 1.0
+                    for rx, t in ((_BODY_RE, trips), (_COND_RE, trips + 1)):
+                        mm = rx.search(op.rest)
+                        if mm:
+                            new = base * t
+                            if mult[mm.group(1)] < new:
+                                mult[mm.group(1)] = new
+                                changed = True
+                else:
+                    mm = _CALLS_RE.search(op.rest)
+                    if mm:
+                        if mult[mm.group(1)] < base:
+                            mult[mm.group(1)] = base
+                            changed = True
+                    for b in re.finditer(r"(?:true_computation=|"
+                                         r"false_computation=)%?([\w.\-]+)",
+                                         op.rest):
+                        if mult[b.group(1)] < base:
+                            mult[b.group(1)] = base
+                            changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are %name tokens before any ')', attributes follow
+    args = rest.split(")")[0]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def dot_flops(comps, mult) -> tuple[float, dict]:
+    """Total dot FLOPs (per device) with loop multipliers; split by input
+    dtype (bf16-input dots hit the MXU at full rate, f32 at 1/4)."""
+    total = 0.0
+    by_dtype = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind not in ("dot", "convolution"):
+                continue
+            _, out_dims = first_shape(op.type_str)
+            out_elems = math.prod(out_dims) if out_dims else 1
+            ops_names = _operand_names(op.rest)
+            lhs_type = comp.symbols.get(ops_names[0]) if ops_names else None
+            contract = 1
+            lc = _LHS_CONTRACT_RE.search(op.rest)
+            if lhs_type and lc and lc.group(1):
+                _, lhs_dims = first_shape(lhs_type)
+                for idx in lc.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+            flops = 2.0 * out_elems * contract * m
+            total += flops
+            in_dt = (first_shape(lhs_type)[0] if lhs_type else None) or "f32"
+            by_dtype[in_dt] += flops
+    return total, dict(by_dtype)
+
+
+def collective_bytes(comps, mult) -> tuple[float, dict]:
+    """Effective wire bytes per device (ring formulas), with multipliers.
+
+    all-gather:      (N-1)/N * output bytes
+    reduce-scatter:  (N-1)/N * input bytes
+    all-reduce:      2 * (N-1)/N * bytes        (RS + AG)
+    all-to-all:      (N-1)/N * bytes
+    collective-permute: bytes
+    """
+    total = 0.0
+    by_kind = defaultdict(float)
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind not in COLLECTIVES:
+                continue
+            n = _group_size(op.rest)
+            frac = (n - 1) / n if n > 1 else 0.0
+            b = shape_bytes(op.type_str)
+            if op.kind == "all-reduce":
+                wire = 2.0 * frac * b
+            elif op.kind == "collective-permute":
+                wire = float(b)
+            else:
+                wire = frac * b
+            total += wire * m
+            by_kind[op.kind] += wire * m
+    return total, dict(by_kind)
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_ITOA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+_SKIP_MEM = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "iota"}
+
+
+def memory_bytes(comps, mult, fusion_internal: set[str]) -> float:
+    """HBM traffic proxy: sum over top-level ops of (operand + output
+    bytes) x multiplier, excluding fusion-internal computations and pure
+    bookkeeping ops.  Collectives excluded (counted in their own term).
+
+    In-place ops are modeled physically, not syntactically: XLA aliases the
+    big buffer of dynamic-update-slice / scatter (writes only the slice) and
+    dynamic-slice / gather read only the slice — counting the full operand
+    per loop trip would make every lax.scan output-stacking look quadratic.
+    """
+    total = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or cname in fusion_internal:
+            continue
+        for op in comp.ops:
+            if op.kind in _SKIP_MEM or op.kind in COLLECTIVES:
+                continue
+            if op.kind in ("while", "call", "conditional"):
+                continue  # their bodies are counted directly
+            total += _op_traffic(comp, op) * m
+    return total
+
+
+def _type_sig(type_str: str) -> str:
+    """dtype+dims signature, ignoring layout braces."""
+    return ";".join(f"{m.group(1)}[{m.group(2)}]"
+                    for m in _SHAPE_RE.finditer(type_str))
+
+
+def _op_traffic(comp: Computation, op: Op) -> float:
+    """Physical HBM bytes of one op: read inputs once + write output once,
+    with in-place aliasing: when an operand's type equals the output type
+    (dynamic-update-slice / scatter / DUS-rooted fusions), the big buffer is
+    aliased — only the *other* operands (the update slice) move, each capped
+    at the output size."""
+    names = _operand_names(op.rest)
+    out_b = shape_bytes(op.type_str)
+    out_sig = _type_sig(op.type_str)
+    opnd = [(n, comp.symbols.get(n)) for n in names]
+    opnd_b = [(n, shape_bytes(t) if t else 0, t) for n, t in opnd]
+
+    if op.kind in ("dynamic-slice", "gather", "slice"):
+        return 2.0 * out_b                      # slice read + slice write
+    if op.kind in ("dynamic-update-slice", "scatter"):
+        small = sum(b for i, (n, b, t) in enumerate(opnd_b) if i != 0)
+        return 2.0 * small                      # update read + update write
+
+    aliased = None
+    for i, (n, b, t) in enumerate(opnd_b):
+        if t and _type_sig(t) == out_sig:
+            aliased = i
+            break
+    if op.kind == "fusion":
+        if aliased is not None and len(opnd_b) > 1:
+            # DUS-rooted fusion: the aliased buffer stays put; the real
+            # traffic is the other operands (the updates), capped at out
+            small = sum(min(b, out_b) for i, (n, b, t) in enumerate(opnd_b)
+                        if i != aliased)
+            return 2.0 * max(small, 1.0)
+        # fusions internally dynamic-slice big loop-carried operands: a
+        # tiny-output fusion cannot physically stream a full buffer per
+        # trip — cap each operand read at 8x the fusion output
+        capped = sum(min(b, 8 * out_b) for _, b, _ in opnd_b)
+        return out_b + capped
+    in_b = sum(b for _, b, _ in opnd_b)
+    return out_b + in_b
+
+
+def fusion_internal_comps(comps) -> set[str]:
+    """Computations reachable only via fusion ``calls=`` / reducers."""
+    internal = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                if m:
+                    internal.add(m.group(1))
+            m = re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+            if m:
+                internal.add(m.group(1))
+            m = re.search(r"comparator=%?([\w.\-]+)", op.rest)
+            if m:
+                internal.add(m.group(1))
+    return internal
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    dot_flops: float
+    dot_flops_by_dtype: dict
+    collective_bytes: float
+    collective_by_kind: dict
+    memory_bytes: float
+    n_while: int
+    max_trip: int
+
+
+def analyze(text: str) -> HLOAnalysis:
+    comps = parse_computations(text)
+    entry = _entry_name(comps, text)
+    mult = compute_multipliers(comps, entry)
+    flops, by_dt = dot_flops(comps, mult)
+    coll, by_kind = collective_bytes(comps, mult)
+    internal = fusion_internal_comps(comps)
+    mem = memory_bytes(comps, mult, internal)
+    n_while = sum(1 for c in comps.values() for op in c.ops
+                  if op.kind == "while")
+    trips = [int(m.group(1)) for c in comps.values() for op in c.ops
+             if op.kind == "while"
+             for m in [_TRIP_RE.search(op.rest)] if m]
+    return HLOAnalysis(flops, by_dt, coll, by_kind, mem, n_while,
+                       max(trips) if trips else 0)

@@ -1,0 +1,118 @@
+"""Batched serving engine: continuous-batching-lite over fixed decode slots.
+
+The engine owns a fixed batch of decode slots (the decode_32k shape: 128
+slots, 32k cache).  Requests are admitted into free slots after a prefill
+step; every engine tick runs one fused decode step for all slots; finished
+sequences free their slot.  Greedy or temperature sampling.
+
+This mirrors production continuous batching minus speculative decoding:
+per-slot state is (cache slice, position, done).  Since caches are stacked
+per-layer and slot-indexed on the batch axis, admission writes one batch row
+— a dynamic_update_slice per cache leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import decode as decode_mod
+from repro.nn import transformer
+from repro.nn.transformer import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S0] token ids
+    max_new: int = 32
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _batch_axis_of(cache_leaf_spec):  # caches: batch axis position varies
+    return None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache, _ = decode_mod.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros(slots, np.int32)        # next write index
+        self.live: list[Request | None] = [None] * slots
+        self.last_tok = np.zeros(slots, np.int32)
+
+        def step(params, cache, tokens, idx):
+            logits, cache = decode_mod.decode_step(
+                params, cfg, cache, {"tokens": tokens}, idx)
+            return logits, cache
+
+        self._step = jax.jit(step)
+
+    # -- admission ---------------------------------------------------------
+
+    def try_admit(self, req: Request) -> bool:
+        try:
+            slot = self.live.index(None)
+        except ValueError:
+            return False
+        # prefill the prompt token-by-token through the decode path (slot
+        # isolation; bulk prefill would use transformer.forward(mode=
+        # "prefill") on a dedicated prefill batch in a disaggregated setup)
+        for t, tok in enumerate(req.prompt):
+            tokens = jnp.asarray(self.last_tok.reshape(-1, 1))
+            tokens = tokens.at[slot, 0].set(int(tok))
+            logits, self.cache = self._step(
+                self.params, self.cache, tokens, jnp.int32(self.pos[slot]))
+            self.pos[slot] += 1
+        self.live[slot] = req
+        self.last_tok[slot] = int(jnp.argmax(logits[slot]))
+        req.out.append(int(self.last_tok[slot]))
+        return True
+
+    # -- one decode tick for the whole batch --------------------------------
+
+    def tick(self):
+        if all(r is None for r in self.live):
+            return
+        tokens = jnp.asarray(self.last_tok.reshape(-1, 1))
+        idx = jnp.int32(int(self.pos.max()))        # slots share the tick idx
+        logits, self.cache = self._step(self.params, self.cache, tokens, idx)
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = jax.random.categorical(sub, logits / self.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt, np.int32)
+        for s, req in enumerate(self.live):
+            if req is None:
+                continue
+            req.out.append(int(nxt[s]))
+            self.last_tok[s] = nxt[s]
+            self.pos[s] += 1
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                self.live[s] = None          # free the slot
+
+    def run(self, requests: list[Request], max_ticks: int = 1000):
+        """Drive to completion; returns the finished requests."""
+        pending = list(requests)
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            if not pending and all(r is None for r in self.live):
+                break
+            self.tick()
+            done.extend(r for r in requests if r.done and r not in done)
+        return [r for r in requests if r.done]

@@ -1,0 +1,22 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_mean,
+    tree_zeros_like,
+    tree_bytes,
+    tree_count,
+    tree_l2norm,
+)
+from repro.utils.timing import Timer, median_time
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_mean",
+    "tree_zeros_like",
+    "tree_bytes",
+    "tree_count",
+    "tree_l2norm",
+    "Timer",
+    "median_time",
+]

@@ -1,0 +1,36 @@
+"""Wall-clock timing helpers for benchmarks (block_until_ready aware)."""
+from __future__ import annotations
+
+import time
+import statistics
+from typing import Callable
+
+import jax
+
+
+class Timer:
+    """Context-manager wall timer (seconds)."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+        return False
+
+
+def _block(x):
+    return jax.block_until_ready(x)
+
+
+def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` with device sync."""
+    for _ in range(warmup):
+        _block(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)

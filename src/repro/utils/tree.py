@@ -1,0 +1,55 @@
+"""Pytree helpers used across the framework (no flax/optax in this env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_mean(trees):
+    """Mean of a list of pytrees with identical structure."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_count(a) -> int:
+    """Total number of scalar parameters in the tree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_l2norm(a):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(a)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )

@@ -1,0 +1,101 @@
+"""Per-kernel allclose vs ref.py oracles — shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.kernels.glm_grad import glm_grad
+from repro.kernels.glm_grad.ref import glm_grad_ref
+from repro.kernels.glm_sgd import glm_sgd_epoch
+from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
+from repro.kernels.glm_sparse import ell_glm_grad
+from repro.kernels.glm_sparse.ref import ell_glm_grad_ref
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def _xyw(rng, n, d, dtype=np.float32):
+    X = jnp.asarray(rng.normal(0, 1, (n, d)).astype(dtype))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(dtype))
+    w = jnp.asarray(rng.normal(0, 0.1, d).astype(dtype))
+    return X, y, w
+
+
+@pytest.mark.parametrize("task", ["lr", "svm"])
+@pytest.mark.parametrize("layout", ["row", "col"])
+@pytest.mark.parametrize("n,d", [(64, 54), (200, 16), (96, 300), (32, 128)])
+def test_glm_grad_kernel(task, layout, n, d, rng):
+    X, y, w = _xyw(rng, n, d)
+    ref = glm_grad_ref(task, w, X, y)
+    out = glm_grad(task, w, X, y, layout=layout, block_rows=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("task", ["lr", "svm"])
+@pytest.mark.parametrize("mb", [1, 4, 16])
+@pytest.mark.parametrize("n,d", [(32, 54), (64, 130)])
+def test_glm_sgd_kernel(task, mb, n, d, rng):
+    X, y, w = _xyw(rng, n, d)
+    ref = glm_sgd_epoch_ref(task, w, X, y, 0.02, mb)
+    out = glm_sgd_epoch(task, w, X, y, step=0.02, micro_batch=mb)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("task", ["lr", "svm"])
+@pytest.mark.parametrize("n,d,k", [(64, 512, 12), (100, 700, 20), (40, 256, 6)])
+def test_glm_sparse_kernel(task, n, d, k, rng):
+    ds = synthetic.make_sparse("sp", n, d, k * 0.6, k, seed=int(d))
+    y = jnp.asarray(ds.y)
+    w = jnp.asarray(rng.normal(0, 0.1, d).astype(np.float32))
+    ref = ell_glm_grad_ref(task, w, ds.ell.values, ds.ell.indices, y)
+    out = ell_glm_grad(task, w, ds.ell.values, ds.ell.indices, y,
+                       block_rows=8, d_block=256, force_path="pallas")
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+def test_glm_sparse_auto_path_picks_xla_when_huge(rng):
+    """Very wide models route to the XLA gather path automatically."""
+    from repro.kernels.glm_sparse.ops import pallas_path_ok
+    assert not pallas_path_ok(n=10_000, d=1_000_000)
+    assert pallas_path_ok(n=10_000, d=20_958)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_kernel(causal, window, hq, hkv, rng):
+    B, S, hd = 2, 64, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, hq, S, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, hkv, S, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, hkv, S, hd)).astype(np.float32))
+    kr = jnp.repeat(k, hq // hkv, axis=1)
+    vr = jnp.repeat(v, hq // hkv, axis=1)
+    ref = attention_ref(q, kr, vr, causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=16, block_k=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    B, H, S, hd = 1, 2, 32, 16
+    q = jnp.asarray(rng.normal(0, 1, (B, H, S, hd)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (B, H, S, hd)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (B, H, S, hd)), dtype=jnp.bfloat16)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=0.05,
+                               atol=0.05)
+
+
+def test_flash_attention_decode_shape():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(0, 1, (2, 4, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 64, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 64, 16)).astype(np.float32))
+    ref = attention_ref(q, jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1),
+                        causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=1, block_k=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,109 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import glm, sgd, sparse
+from repro.optim import compress
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(8, 200), r=st.integers(1, 8),
+       access=st.sampled_from(["chunk", "round_robin"]),
+       rep_k=st.integers(0, 4))
+@settings(**SETTINGS)
+def test_partition_indices_exact_cover(n, r, access, rep_k):
+    """Every replica gets per+rep_k examples; the non-halo part covers
+    [0, per*r) exactly once; all indices in range."""
+    if r > n:
+        return
+    parts = sgd.partition_indices(n, r, access, rep_k)
+    per = n // r
+    assert parts.shape == (r, per + rep_k)
+    base = parts[:, :per].reshape(-1)
+    assert sorted(base.tolist()) == list(range(per * r))
+    assert parts.min() >= 0 and parts.max() < per * r
+
+
+@given(r=st.integers(1, 6), d=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_merge_is_idempotent_and_mean_preserving(r, d):
+    rng = np.random.default_rng(r * 100 + d)
+    W = jnp.asarray(rng.normal(0, 1, (r, d)).astype(np.float32))
+    M = sgd.merge_replicas(W)
+    np.testing.assert_allclose(np.asarray(M).mean(0), np.asarray(W).mean(0),
+                               rtol=1e-5, atol=1e-6)
+    M2 = sgd.merge_replicas(M)
+    np.testing.assert_allclose(M, M2, rtol=1e-6, atol=1e-7)
+
+
+@given(n=st.integers(1, 40), d=st.integers(2, 64), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_ell_matches_dense_grad(n, d, seed):
+    """ELL gradient == dense gradient for arbitrary sparsity patterns."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    X[rng.random((n, d)) < 0.8] = 0.0
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    w = rng.normal(0, 0.5, d).astype(np.float32)
+    m = sparse.from_dense(X)
+    gs = sparse.grad("lr", m, jnp.asarray(y), jnp.asarray(w))
+    gd = glm.grad_fused("lr", jnp.asarray(w), jnp.asarray(X), jnp.asarray(y))
+    np.testing.assert_allclose(gs, gd, rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 99), scale=st.floats(1e-3, 1e3),
+       n=st.integers(1, 2000))
+@settings(**SETTINGS)
+def test_quantize_dequantize_bounded_error(seed, scale, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((scale * rng.normal(0, 1, (n,))).astype(np.float32))
+    q, s = compress.quantize_leaf(x)
+    deq = compress.dequantize_leaf(q, s, x)
+    max_scale = float(jnp.max(s))
+    assert float(jnp.max(jnp.abs(deq - x))) <= 0.5 * max_scale + 1e-6
+
+
+@given(seed=st.integers(0, 50), b=st.integers(1, 3),
+       s_pow=st.integers(3, 6), causal=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_chunked_attention_equals_reference(seed, b, s_pow, causal):
+    from repro.nn import attention
+    from repro.kernels.flash_attn.ref import attention_ref
+    rng = np.random.default_rng(seed)
+    S, H, hd = 2 ** s_pow, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (b, H, S, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, H, S, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, H, S, hd)).astype(np.float32))
+    ref = attention_ref(q, k, v, causal=causal)
+    out = attention.chunked_attention(q, k, v, causal=causal, chunk_q=8)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 30), mb=st.sampled_from([1, 2, 8]))
+@settings(max_examples=10, deadline=None)
+def test_fused_sgd_kernel_matches_ref_property(seed, mb):
+    from repro.kernels.glm_sgd import glm_sgd_epoch
+    from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
+    rng = np.random.default_rng(seed)
+    n, d = 16, 20
+    X = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, d).astype(np.float32))
+    ref = glm_sgd_epoch_ref("lr", w, X, y, 0.05, mb)
+    out = glm_sgd_epoch("lr", w, X, y, step=0.05, micro_batch=mb)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(k=st.integers(0, 8), r=st.integers(2, 8))
+@settings(**SETTINGS)
+def test_halo_preserves_base_partition(k, r):
+    from repro.data.pipeline import shard_with_halo
+    n = r * 16
+    shards = shard_with_halo(n, r, k)
+    for s in shards:
+        assert len(s) == 16 + k
+    base = np.concatenate([s[:16] for s in shards])
+    assert sorted(base.tolist()) == list(range(n))

@@ -1,0 +1,77 @@
+"""Parallel-SGD engine: partitioning, replication, and the paper's
+qualitative claims as executable assertions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import glm, sgd
+from repro.data import synthetic
+
+
+def test_partition_chunk_covers_exactly():
+    parts = sgd.partition_indices(64, 4, "chunk", rep_k=0)
+    assert parts.shape == (4, 16)
+    assert sorted(parts.reshape(-1).tolist()) == list(range(64))
+    # chunk = contiguous ranges
+    assert (np.diff(parts, axis=1) == 1).all()
+
+
+def test_partition_round_robin_strides():
+    parts = sgd.partition_indices(64, 4, "round_robin")
+    assert (np.diff(parts, axis=1) == 4).all()
+    assert sorted(parts.reshape(-1).tolist()) == list(range(64))
+
+
+def test_partition_rep_k_halo():
+    parts = sgd.partition_indices(64, 4, "chunk", rep_k=3)
+    assert parts.shape == (4, 19)
+    # halo of replica r = first 3 examples of replica (r+1) % 4
+    for r in range(4):
+        np.testing.assert_array_equal(
+            parts[r, -3:], parts[(r + 1) % 4, :3])
+
+
+def test_merge_replicas_mean():
+    W = jnp.asarray(np.arange(12, dtype=np.float32).reshape(4, 3))
+    M = sgd.merge_replicas(W)
+    assert M.shape == W.shape
+    np.testing.assert_allclose(M[0], W.mean(0))
+    np.testing.assert_allclose(M, jnp.broadcast_to(W.mean(0), W.shape))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic.make_dense("toy", 512, 16, seed=2)
+
+
+def test_paper_claim_more_replicas_worse_statistical_efficiency(ds):
+    """Paper §5.2.2: 'the more replicas, the lower the statistical
+    efficiency' — fewer merges of more-diverged models learn less per epoch."""
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    losses = {}
+    for r in (2, 16):
+        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=r, local_batch=8), 6)
+        losses[r] = res.losses[-1]
+    assert losses[16] >= losses[2] * 0.999, losses
+
+
+def test_paper_claim_rep_k_improves_statistical_efficiency(ds):
+    """Paper §5.2.3: k-wise replication extracts more information per pass."""
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    res0 = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=4,
+                                           rep_k=0), 6)
+    resk = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=4,
+                                           rep_k=16), 6)
+    assert resk.losses[-1] <= res0.losses[-1] * 1.001
+
+
+def test_access_path_changes_assignment_not_semantics(ds):
+    """row-rr vs row-ch assign different examples but both converge."""
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    for access in ("chunk", "round_robin"):
+        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=4, local_batch=8,
+                                              access=access), 6)
+        assert res.losses[-1] < res.losses[0]
