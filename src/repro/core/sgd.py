@@ -58,13 +58,24 @@ class SyncSGD:
     ``batch`` = B in Algorithm 1.  B=N gives batch gradient descent (the
     TF/BIDMach/ViennaCL configuration of the paper's experiments); smaller B
     gives mini-batch synchronous SGD with an update barrier per batch.
+
+    ``kernel_backend`` routes the gradient/epoch computation through the
+    kernel dispatch registry (``pallas-tpu`` / ``pallas-interpret`` /
+    ``reference`` — see DESIGN.md §3) instead of the inline XLA
+    expressions; None keeps the pure-XLA path.  Dense data supports any
+    batch size (full-batch → glm_grad, mini-batch → glm_sgd); sparse
+    data supports full-batch only (glm_sparse).
     """
 
     batch: int | None = None  # None -> full batch (B = N)
+    kernel_backend: str | None = None
 
     @property
     def name(self) -> str:
-        return "sync" if self.batch is None else f"sync-b{self.batch}"
+        base = "sync" if self.batch is None else f"sync-b{self.batch}"
+        if self.kernel_backend:
+            base += f"[{self.kernel_backend}]"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,26 +228,59 @@ def make_epoch_fn(
         batch = strategy.batch or n
 
         if sparse_data:
+            backend = strategy.kernel_backend
+            if backend is not None and batch < n:
+                raise ValueError(
+                    "kernel_backend on sparse data needs full-batch updates "
+                    "(glm_sparse is a sum-gradient kernel; no sparse epoch "
+                    "kernel is registered)")
+            if backend is not None:
+                from repro.kernels.glm_sparse import ell_glm_grad as _kgrad_sp
 
-            @jax.jit
-            def epoch(w):
-                if batch >= n:
-                    g = sparse.grad(task, m, y, w)
-                    return w - (step / n) * g * n  # alpha applied to sum grad
-                return sparse.minibatch_epoch(task, w, m, y, step, batch)
+                @jax.jit
+                def epoch(w):
+                    g = _kgrad_sp(task, w, m.values, m.indices, y,
+                                  backend=backend)
+                    return w - step * g
+
+            else:
+
+                @jax.jit
+                def epoch(w):
+                    if batch >= n:
+                        g = sparse.grad(task, m, y, w)
+                        return w - (step / n) * g * n  # alpha on sum grad
+                    return sparse.minibatch_epoch(task, w, m, y, step, batch)
 
             @jax.jit
             def loss_fn(w):
                 return sparse.loss(task, m, y, w)
 
         else:
+            backend = strategy.kernel_backend
+            if backend is not None:
+                # route through the kernel dispatch registry: full-batch ->
+                # glm_grad (fused sum gradient), mini-batch -> glm_sgd
+                # (fused epoch, model resident in VMEM on TPU)
+                from repro.kernels.glm_grad import glm_grad as _kgrad
+                from repro.kernels.glm_sgd import glm_sgd_epoch as _kepoch
 
-            @jax.jit
-            def epoch(w):
-                if batch >= n:
-                    g = glm.grad_fused(task, w, X, y)
-                    return w - step * g
-                return glm.minibatch_epoch(task, w, X, y, step, batch)
+                @jax.jit
+                def epoch(w):
+                    if batch >= n:
+                        g = _kgrad(task, w, X, y, backend=backend)
+                        return w - step * g
+                    return _kepoch(task, w, X, y, step=step,
+                                   micro_batch=batch, backend=backend)
+
+            else:
+
+                @jax.jit
+                def epoch(w):
+                    if batch >= n:
+                        g = glm.grad_fused(task, w, X, y)
+                        return w - step * g
+                    return glm.minibatch_epoch(task, w, X, y, step, batch)
 
             @jax.jit
             def loss_fn(w):

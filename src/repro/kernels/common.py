@@ -1,5 +1,38 @@
-"""Shared helpers for Pallas TPU kernels (padding, interpret detection)."""
+"""Shared kernel infrastructure: backend dispatch registry, Pallas
+version-compat shims, and tiling helpers.
+
+The paper implements every SGD primitive "in two flavors" — CPU routines
+and highly-parallel GPU kernels — and picks per dataset/hardware.  The
+analogue here is a three-backend registry per kernel family:
+
+* ``pallas-tpu``        compiled Pallas (Mosaic) — the TPU runtime path;
+* ``pallas-interpret``  the same Pallas kernel run by the interpreter —
+                        bit-for-bit kernel logic, runs anywhere (CPU CI);
+* ``reference``         the pure-jnp oracle (ref.py) — XLA-compiled,
+                        the correctness ground truth and the fallback
+                        when capability flags rule the Pallas path out.
+
+Selection order (``resolve_backend``):
+
+1. explicit call-site forcing: a ``backend=`` argument, or the legacy
+   ``interpret=`` / ``force_path=`` flags;
+2. the ``REPRO_KERNEL_BACKEND`` environment variable (global override —
+   e.g. ``REPRO_KERNEL_BACKEND=reference`` to take Pallas entirely out
+   of the picture when bisecting a numerics issue);
+3. auto: the first backend of ``pallas-tpu`` → ``pallas-interpret`` →
+   ``reference`` that is available on this host AND whose capability
+   flags accept the call (dtype, sparsity, shape budgets).
+
+Explicit and env overrides bypass the *capability* heuristics (forcing
+is on you) but still fail fast on hard unavailability: ``pallas-tpu``
+cannot lower off-TPU and raises a clear error instead of a Mosaic
+backtrace.
+"""
 from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -7,14 +40,196 @@ import jax.numpy as jnp
 LANE = 128      # TPU minor-dim tile (VREG lanes / MXU edge)
 SUBLANE = 8     # fp32 second-minor tile
 
+# ---------------------------------------------------------------------------
+# Pallas version-compat shim
+# ---------------------------------------------------------------------------
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params across the Pallas API rename.
+
+    jax <= 0.4.x exposes ``pltpu.TPUCompilerParams``; newer releases
+    renamed it to ``pltpu.CompilerParams``.  Every kernel goes through
+    this shim so the drift is absorbed in exactly one place.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        raise RuntimeError(
+            "this Pallas exposes neither CompilerParams nor TPUCompilerParams;"
+            " jax >= 0.4.30 is required (see pyproject.toml)")
+    return cls(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+PALLAS_TPU = "pallas-tpu"
+PALLAS_INTERPRET = "pallas-interpret"
+REFERENCE = "reference"
+
+#: auto-selection preference, best first
+BACKEND_ORDER = (PALLAS_TPU, PALLAS_INTERPRET, REFERENCE)
+
+ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class Caps:
+    """Capability flags of one kernel implementation.
+
+    ``None`` means unconstrained.  ``check`` is a free-form predicate on
+    the call-info dict for budgets that don't fit a named flag (e.g. the
+    glm_sparse one-hot VMEM/FLOP budget).
+    """
+
+    dtypes: tuple[str, ...] | None = ("float32", "bfloat16")
+    sparse: bool = False                      # consumes ELL sparse operands
+    head_dim_multiple: int | None = None      # flash-attn lane constraint
+    check: Callable[[dict], bool] | None = None
+
+    def supports(self, info: dict[str, Any]) -> bool:
+        dt = info.get("dtype")
+        if self.dtypes is not None and dt is not None and dt not in self.dtypes:
+            return False
+        if info.get("sparse") and not self.sparse:
+            return False
+        hd = info.get("head_dim")
+        if (self.head_dim_multiple and hd is not None
+                and hd % self.head_dim_multiple != 0):
+            return False
+        if self.check is not None and not self.check(info):
+            return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    kernel: str
+    backend: str
+    fn: Callable
+    caps: Caps
+
+
+_REGISTRY: dict[str, dict[str, KernelImpl]] = {}
+
+
+def register_kernel(kernel: str, backend: str, *, caps: Caps | None = None):
+    """Decorator: register ``fn`` as the ``backend`` flavor of ``kernel``.
+
+    All flavors of one kernel must share a call signature; the dispatch
+    layer forwards arguments verbatim.
+    """
+    if backend not in BACKEND_ORDER:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKEND_ORDER}")
+
+    def deco(fn):
+        _REGISTRY.setdefault(kernel, {})[backend] = KernelImpl(
+            kernel, backend, fn, caps or Caps()
+        )
+        return fn
+
+    return deco
+
+
+def registered_kernels() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backends_for(kernel: str) -> tuple[str, ...]:
+    """Registered backends of ``kernel``, in preference order."""
+    impls = _REGISTRY.get(kernel, {})
+    return tuple(b for b in BACKEND_ORDER if b in impls)
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def resolve_interpret(interpret: bool | None) -> bool:
-    """interpret=None -> auto: compiled on TPU, interpreted elsewhere (CPU CI)."""
-    return (not on_tpu()) if interpret is None else interpret
+def _host_available(backend: str) -> bool:
+    """Hard availability: can this backend run on the current host at all?"""
+    return backend != PALLAS_TPU or on_tpu()
+
+
+def available_backends(kernel: str, info: dict | None = None) -> tuple[str, ...]:
+    """Backends of ``kernel`` runnable on this host (and, when ``info`` is
+    given, whose capability flags accept the call) — what the conformance
+    suite parametrizes over."""
+    out = []
+    for b in backends_for(kernel):
+        impl = _REGISTRY[kernel][b]
+        if not _host_available(b):
+            continue
+        if info is not None and not impl.caps.supports(info):
+            continue
+        out.append(b)
+    return tuple(out)
+
+
+def resolve_backend(
+    kernel: str,
+    *,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    info: dict | None = None,
+) -> str:
+    """Pick the backend for one call.  See module docstring for the order.
+
+    ``interpret`` is the legacy flag the pre-registry wrappers exposed:
+    True → ``pallas-interpret``, False → ``pallas-tpu``, None → auto.
+    Like ``backend``, it is call-site-explicit and beats the env var.
+    """
+    impls = _REGISTRY.get(kernel)
+    if not impls:
+        raise KeyError(f"no kernel registered under {kernel!r}; "
+                       f"known: {registered_kernels()}")
+
+    forced = backend
+    if forced is None and interpret is not None:
+        forced = PALLAS_INTERPRET if interpret else PALLAS_TPU
+    if forced is None:
+        forced = os.environ.get(ENV_BACKEND) or None
+    if forced is not None:
+        if forced not in impls:
+            raise ValueError(
+                f"backend {forced!r} not registered for {kernel!r}; "
+                f"registered: {backends_for(kernel)}")
+        if not _host_available(forced):
+            raise RuntimeError(
+                f"backend {forced!r} for {kernel!r} needs a TPU host "
+                f"(jax.default_backend()={jax.default_backend()!r}); "
+                f"available here: {available_backends(kernel)}")
+        return forced
+
+    info = info or {}
+    for b in backends_for(kernel):
+        if _host_available(b) and impls[b].caps.supports(info):
+            return b
+    raise RuntimeError(
+        f"no backend of {kernel!r} accepts call info {info!r}; "
+        f"registered: {backends_for(kernel)}")
+
+
+def dispatch(
+    kernel: str,
+    *args,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    info: dict | None = None,
+    **kwargs,
+):
+    """Resolve a backend and invoke the registered implementation."""
+    b = resolve_backend(kernel, backend=backend, interpret=interpret, info=info)
+    return _REGISTRY[kernel][b].fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Tiling helpers
+# ---------------------------------------------------------------------------
 
 
 def pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 NEG_INF = -1e30
 
 
@@ -120,7 +122,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),    # running max
             pltpu.VMEM((block_q, 1), jnp.float32),    # running normalizer
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,4 +1,10 @@
-"""Jitted public wrapper for blocked attention (GQA-aware)."""
+"""Public wrapper for blocked attention (GQA-aware) — registry-dispatched.
+
+Registered flavors receive the raw GQA tensors and broadcast kv heads
+inside their jitted bodies (so the repeat fuses into the compiled
+computation).  The Pallas flavors carry a head-dim sublane constraint;
+odd head dims auto-route to the dense ``reference`` oracle.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,11 +16,65 @@ from repro.kernels import common
 from repro.kernels.flash_attn import kernel as K
 from repro.kernels.flash_attn import ref as R
 
+_PALLAS_CAPS = common.Caps(head_dim_multiple=common.SUBLANE)
+
+
+def _gqa_broadcast(q, k, v):
+    hq, hkv = q.shape[1], k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    if hkv != hq:  # GQA: broadcast kv heads to query groups
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return k, v
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
 )
+def _pallas(q, k, v, *, causal, window, block_q, block_k, interpret):
+    k, v = _gqa_broadcast(q, k, v)
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+    bq = block_q or common.pick_block(sq, 128, 8)
+    bk = block_k or common.pick_block(sk, 128, 8)
+    out = K.flash_attention_pallas(
+        q.reshape(b * h, sq, hd),
+        k.reshape(b * h, sk, hd),
+        v.reshape(b * h, sk, hd),
+        causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out.reshape(b, h, sq, hd)
+
+
+@common.register_kernel("flash_attn", common.PALLAS_TPU, caps=_PALLAS_CAPS)
+def _flash_attn_tpu(q, k, v, *, causal=True, window=None, block_q=None,
+                    block_k=None):
+    return _pallas(q, k, v, causal=causal, window=window, block_q=block_q,
+                   block_k=block_k, interpret=False)
+
+
+@common.register_kernel("flash_attn", common.PALLAS_INTERPRET, caps=_PALLAS_CAPS)
+def _flash_attn_interpret(q, k, v, *, causal=True, window=None, block_q=None,
+                          block_k=None):
+    return _pallas(q, k, v, causal=causal, window=window, block_q=block_q,
+                   block_k=block_k, interpret=True)
+
+
+@common.register_kernel("flash_attn", common.REFERENCE,
+                        caps=common.Caps(dtypes=None))
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def _flash_attn_reference(q, k, v, *, causal=True, window=None, block_q=None,
+                          block_k=None):
+    del block_q, block_k
+    k, v = _gqa_broadcast(q, k, v)
+    return R.attention_ref(q, k, v, causal=causal, window=window)
+
+
 def flash_attention(
     q: jax.Array,  # [B, Hq, Sq, hd]
     k: jax.Array,  # [B, Hkv, Sk, hd]
@@ -24,31 +84,18 @@ def flash_attention(
     window: int | None = None,
     block_q: int | None = None,
     block_k: int | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Flash attention with GQA broadcast.  Returns [B, Hq, Sq, hd]."""
-    interpret = common.resolve_interpret(interpret)
-    b, hq, sq, hd = q.shape
-    hkv = k.shape[1]
-    assert hq % hkv == 0, (hq, hkv)
-    if hkv != hq:  # GQA: broadcast kv heads to query groups
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-
-    scale = 1.0 / (hd ** 0.5)
-    sk = k.shape[2]
-    bq = block_q or common.pick_block(sq, 128, 8)
-    bk = block_k or common.pick_block(sk, 128, 8)
-
-    out = K.flash_attention_pallas(
-        q.reshape(b * hq, sq, hd),
-        k.reshape(b * hq, sk, hd),
-        v.reshape(b * hq, sk, hd),
-        causal=causal, window=window, scale=scale,
-        block_q=bq, block_k=bk, interpret=interpret,
+    hd = q.shape[3]
+    assert q.shape[1] % k.shape[1] == 0, (q.shape[1], k.shape[1])
+    info = {"dtype": jnp.result_type(q).name, "head_dim": hd}
+    return common.dispatch(
+        "flash_attn", q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        backend=backend, interpret=interpret, info=info,
     )
-    return out.reshape(b, hq, sq, hd)
 
 
 # re-export the oracle for tests

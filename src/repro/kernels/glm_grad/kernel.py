@@ -97,7 +97,7 @@ def glm_grad_pallas(
         ],
         out_specs=pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),  # g accumulator
         out_shape=jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.tpu_compiler_params(
             dimension_semantics=("arbitrary",),  # revisited output block
         ),
         interpret=interpret,

@@ -1,4 +1,9 @@
-"""Jitted public wrapper for the fused incremental-SGD epoch kernel."""
+"""Public wrapper for the fused incremental-SGD epoch — registry-dispatched.
+
+The ``reference`` flavor is the sequential lax.scan oracle (ref.py); the
+Pallas flavors run one kernel launch per epoch with the model pinned in
+VMEM.  All flavors update in fp32.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,27 +13,18 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.glm_sgd import kernel as K
+from repro.kernels.glm_sgd import ref as R
 
 
 @functools.partial(
     jax.jit, static_argnames=("task", "step", "micro_batch", "interpret")
 )
-def glm_sgd_epoch(
-    task: str,
-    w: jax.Array,   # [d]
-    X: jax.Array,   # [N, d]
-    y: jax.Array,   # [N]
-    *,
-    step: float,
-    micro_batch: int = 8,
-    interpret: bool | None = None,
-) -> jax.Array:
+def _pallas(task, w, X, y, *, step, micro_batch, interpret):
     """One fused SGD epoch over (X, y); model stays in VMEM throughout.
 
     N must be divisible by ``micro_batch`` (the data pipeline guarantees
     this); d is padded to the 128-lane tile internally.
     """
-    interpret = common.resolve_interpret(interpret)
     n, d = X.shape
     assert n % micro_batch == 0, (n, micro_batch)
     d_pad = common.padded(d, common.LANE)
@@ -39,3 +35,43 @@ def glm_sgd_epoch(
         task, wp, Xp, yp, step=step, micro_batch=micro_batch, interpret=interpret
     )
     return w_out[:d, 0]
+
+
+@common.register_kernel("glm_sgd", common.PALLAS_TPU)
+def _glm_sgd_tpu(task, w, X, y, *, step, micro_batch=8):
+    return _pallas(task, w, X, y, step=step, micro_batch=micro_batch,
+                   interpret=False)
+
+
+@common.register_kernel("glm_sgd", common.PALLAS_INTERPRET)
+def _glm_sgd_interpret(task, w, X, y, *, step, micro_batch=8):
+    return _pallas(task, w, X, y, step=step, micro_batch=micro_batch,
+                   interpret=True)
+
+
+@common.register_kernel("glm_sgd", common.REFERENCE, caps=common.Caps(dtypes=None))
+@functools.partial(jax.jit, static_argnames=("task", "step", "micro_batch"))
+def _glm_sgd_reference(task, w, X, y, *, step, micro_batch=8):
+    return R.glm_sgd_epoch_ref(
+        task, w.astype(jnp.float32), X.astype(jnp.float32),
+        y.astype(jnp.float32), step, micro_batch,
+    )
+
+
+def glm_sgd_epoch(
+    task: str,
+    w: jax.Array,   # [d]
+    X: jax.Array,   # [N, d]
+    y: jax.Array,   # [N]
+    *,
+    step: float,
+    micro_batch: int = 8,
+    backend: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One mini-batch SGD epoch via the best available backend."""
+    info = {"dtype": jnp.result_type(X).name, "n": X.shape[0], "d": X.shape[1]}
+    return common.dispatch(
+        "glm_sgd", task, w, X, y, step=step, micro_batch=micro_batch,
+        backend=backend, interpret=interpret, info=info,
+    )

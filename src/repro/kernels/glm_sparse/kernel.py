@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _pull(task, margins, y):
     if task == "lr":
@@ -115,7 +117,7 @@ def ell_glm_grad_pallas(
         out_specs=pl.BlockSpec((d_block, 1), lambda p, j, i: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((d_pad, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n_pad, 1), jnp.float32)],  # margins
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,8 +1,10 @@
-"""Jitted public wrapper for the ELL sparse GLM gradient.
+"""Public wrapper for the ELL sparse GLM gradient — registry-dispatched.
 
-Picks between the Pallas one-hot-MXU kernel (moderate d, bounded N) and the
-XLA gather/segment-sum path (ref) based on a VMEM/FLOP budget — the sparse
-analogue of the paper's per-dataset optimal-configuration finding (Table 6).
+The Pallas one-hot-MXU flavors carry a capability budget (one-hot FLOPs
+grow with d; the margin scratch burns N*4 bytes of VMEM), so very wide /
+very tall problems auto-route to the ``reference`` XLA gather/segment-sum
+flavor — the sparse analogue of the paper's per-dataset optimal-
+configuration finding (Table 6).
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ from repro.kernels import common
 from repro.kernels.glm_sparse import kernel as K
 from repro.kernels.glm_sparse import ref as R
 
-# Budget heuristics for choosing the Pallas path.
+# Budget heuristics for the Pallas path.
 _MAX_D_PALLAS = 32_768      # one-hot FLOPs grow with d
 _MAX_N_PALLAS = 131_072     # margin scratch = N * 4 bytes of VMEM
 
@@ -24,30 +26,18 @@ def pallas_path_ok(n: int, d: int) -> bool:
     return d <= _MAX_D_PALLAS and n <= _MAX_N_PALLAS
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("task", "block_rows", "d_block", "interpret", "force_path"),
+_PALLAS_CAPS = common.Caps(
+    sparse=True,
+    check=lambda info: pallas_path_ok(info.get("n", 0), info.get("d", 0)),
 )
-def ell_glm_grad(
-    task: str,
-    w: jax.Array,        # [d]
-    values: jax.Array,   # [N, K]
-    indices: jax.Array,  # [N, K] int32
-    y: jax.Array,        # [N]
-    *,
-    block_rows: int = 8,
-    d_block: int = 512,
-    interpret: bool | None = None,
-    force_path: str | None = None,   # "pallas" | "xla" | None (auto)
-) -> jax.Array:
-    interpret = common.resolve_interpret(interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("task", "block_rows", "d_block", "interpret")
+)
+def _pallas(task, w, values, indices, y, *, block_rows, d_block, interpret):
     n, kk = values.shape
     d = w.shape[0]
-
-    path = force_path or ("pallas" if pallas_path_ok(n, d) else "xla")
-    if path == "xla":
-        return R.ell_glm_grad_ref(task, w, values, indices, y)
-
     d_pad = common.padded(d, d_block)
     n_pad = common.padded(n, block_rows)
     vp = common.pad_to(values.astype(jnp.float32), 0, n_pad)
@@ -59,3 +49,63 @@ def ell_glm_grad(
         block_rows=block_rows, d_block=d_block, interpret=interpret,
     )
     return g[:d, 0]
+
+
+@common.register_kernel("glm_sparse", common.PALLAS_TPU, caps=_PALLAS_CAPS)
+def _glm_sparse_tpu(task, w, values, indices, y, *, block_rows=8, d_block=512):
+    return _pallas(task, w, values, indices, y, block_rows=block_rows,
+                   d_block=d_block, interpret=False)
+
+
+@common.register_kernel("glm_sparse", common.PALLAS_INTERPRET, caps=_PALLAS_CAPS)
+def _glm_sparse_interpret(task, w, values, indices, y, *, block_rows=8,
+                          d_block=512):
+    return _pallas(task, w, values, indices, y, block_rows=block_rows,
+                   d_block=d_block, interpret=True)
+
+
+@common.register_kernel(
+    "glm_sparse", common.REFERENCE, caps=common.Caps(dtypes=None, sparse=True)
+)
+@functools.partial(jax.jit, static_argnames=("task", "block_rows", "d_block"))
+def _glm_sparse_reference(task, w, values, indices, y, *, block_rows=8,
+                          d_block=512):
+    del block_rows, d_block
+    return R.ell_glm_grad_ref(
+        task, w.astype(jnp.float32), values.astype(jnp.float32), indices,
+        y.astype(jnp.float32),
+    )
+
+
+def ell_glm_grad(
+    task: str,
+    w: jax.Array,        # [d]
+    values: jax.Array,   # [N, K]
+    indices: jax.Array,  # [N, K] int32
+    y: jax.Array,        # [N]
+    *,
+    block_rows: int = 8,
+    d_block: int = 512,
+    backend: str | None = None,
+    interpret: bool | None = None,
+    force_path: str | None = None,   # legacy: "pallas" | "xla" | None (auto)
+) -> jax.Array:
+    """ELL sparse GLM gradient via the best available backend."""
+    n, d = values.shape[0], w.shape[0]
+    if force_path == "xla":
+        backend = backend or common.REFERENCE
+    elif force_path == "pallas" and backend is None:
+        # legacy forcing bypassed the budget; interpret= picks the flavor
+        use_interp = (not common.on_tpu()) if interpret is None else interpret
+        backend = common.PALLAS_INTERPRET if use_interp else common.PALLAS_TPU
+    elif backend is None and interpret is not None and pallas_path_ok(n, d):
+        # legacy interpret= chose the Pallas mode but never overrode the
+        # budget: over-budget problems still take the reference path
+        backend = common.PALLAS_INTERPRET if interpret else common.PALLAS_TPU
+    info = {"dtype": jnp.result_type(values).name, "sparse": True,
+            "n": n, "d": d}
+    return common.dispatch(
+        "glm_sparse", task, w, values, indices, y,
+        block_rows=block_rows, d_block=d_block,
+        backend=backend, info=info,
+    )

@@ -146,8 +146,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, update: str = "sync",
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    from repro.roofline import hlo as hlo_mod
+
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_mod.cost_analysis_dict(compiled)  # list-vs-dict jax drift
     result = {
         "arch": arch, "shape": shape,
         "mesh": "2x16x16" if multi_pod else "16x16",

@@ -43,6 +43,19 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Some releases return one properties dict, others a list with one dict
+    per partition/device (all partitions report identical totals for SPMD
+    modules, so the first entry is the per-device view we want).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def shape_bytes(type_str: str) -> int:
     """Total bytes of a (possibly tuple) HLO type string."""
     total = 0

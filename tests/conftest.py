@@ -1,3 +1,10 @@
+"""Shared fixtures: seeded RNG and kernel test-data factories.
+
+The factories are used by both the per-kernel shape sweeps
+(test_kernels.py) and the backend conformance harness
+(test_kernel_conformance.py), so every suite exercises identically
+distributed inputs.
+"""
 import numpy as np
 import pytest
 
@@ -5,3 +12,48 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def glm_data(rng):
+    """Factory: (n, d[, dtype]) -> (X [n,d], y [n] in {-1,+1}, w [d])."""
+    import jax.numpy as jnp
+
+    def make(n, d, dtype=np.float32):
+        X = jnp.asarray(rng.normal(0, 1, (n, d)), dtype=dtype)
+        y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0), dtype=dtype)
+        w = jnp.asarray(rng.normal(0, 0.1, d), dtype=dtype)
+        return X, y, w
+
+    return make
+
+
+@pytest.fixture
+def attn_data(rng):
+    """Factory: (b, hq, hkv, sq, sk, hd[, dtype]) -> (q, k, v)."""
+    import jax.numpy as jnp
+
+    def make(b, hq, hkv, sq, sk, hd, dtype=np.float32):
+        q = jnp.asarray(rng.normal(0, 1, (b, hq, sq, hd)), dtype=dtype)
+        k = jnp.asarray(rng.normal(0, 1, (b, hkv, sk, hd)), dtype=dtype)
+        v = jnp.asarray(rng.normal(0, 1, (b, hkv, sk, hd)), dtype=dtype)
+        return q, k, v
+
+    return make
+
+
+@pytest.fixture
+def ell_data(rng):
+    """Factory: (n, d, k[, dtype]) -> (values, indices, y, w) in ELL form."""
+    import jax.numpy as jnp
+    from repro.data import synthetic
+
+    def make(n, d, k, dtype=np.float32):
+        ds = synthetic.make_sparse("conf", n, d, k * 0.6, k, seed=int(d))
+        values = jnp.asarray(ds.ell.values, dtype=dtype)
+        indices = jnp.asarray(ds.ell.indices)
+        y = jnp.asarray(ds.y, dtype=dtype)
+        w = jnp.asarray(rng.normal(0, 0.1, d), dtype=dtype)
+        return values, indices, y, w
+
+    return make

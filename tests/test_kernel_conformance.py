@@ -1,0 +1,234 @@
+"""Backend conformance harness for the kernel dispatch layer.
+
+Every registered kernel family runs against its pure-jnp reference oracle
+on every backend available on this host (CPU CI: ``pallas-interpret`` and
+``reference``; TPU adds ``pallas-tpu``), in fp32 and bf16, for both GLM
+losses and both dense and sparse data.  Future kernel PRs must keep this
+suite green — it is the executable contract of DESIGN.md §3.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels  # noqa: F401  — registers all families
+from repro.kernels import common
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.glm_grad import glm_grad
+from repro.kernels.glm_grad.ref import glm_grad_ref
+from repro.kernels.glm_sgd import glm_sgd_epoch
+from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
+from repro.kernels.glm_sparse import ell_glm_grad
+from repro.kernels.glm_sparse.ref import ell_glm_grad_ref
+
+FAMILIES = ("flash_attn", "glm_grad", "glm_sgd", "glm_sparse")
+DTYPES = (jnp.float32, jnp.bfloat16)
+TASKS = ("lr", "svm")
+
+
+def _f32(*arrays):
+    return tuple(a.astype(jnp.float32) for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# Registry invariants
+# ---------------------------------------------------------------------------
+
+
+def test_all_families_registered_with_all_backends():
+    assert set(common.registered_kernels()) >= set(FAMILIES)
+    for fam in FAMILIES:
+        assert common.backends_for(fam) == common.BACKEND_ORDER, fam
+
+
+def test_host_availability_excludes_pallas_tpu_off_tpu():
+    for fam in FAMILIES:
+        avail = common.available_backends(fam)
+        assert common.REFERENCE in avail
+        assert common.PALLAS_INTERPRET in avail
+        assert (common.PALLAS_TPU in avail) == common.on_tpu()
+
+
+def test_resolve_backend_precedence(monkeypatch):
+    monkeypatch.setenv(common.ENV_BACKEND, common.REFERENCE)
+    # env var overrides auto ...
+    assert common.resolve_backend("glm_grad") == common.REFERENCE
+    # ... but explicit call-site forcing beats the env var, whether via
+    # backend= or the legacy interpret= flag
+    assert (common.resolve_backend("glm_grad", backend=common.PALLAS_INTERPRET)
+            == common.PALLAS_INTERPRET)
+    assert (common.resolve_backend("glm_grad", interpret=True)
+            == common.PALLAS_INTERPRET)
+
+
+def test_resolve_backend_env_override_applies_to_calls(monkeypatch, glm_data):
+    X, y, w = glm_data(16, 8)
+    monkeypatch.setenv(common.ENV_BACKEND, common.REFERENCE)
+    out = glm_grad("lr", w, X, y)
+    np.testing.assert_allclose(out, glm_grad_ref("lr", w, X, y),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_resolve_backend_legacy_interpret_flag():
+    assert (common.resolve_backend("glm_grad", interpret=True)
+            == common.PALLAS_INTERPRET)
+    if not common.on_tpu():
+        with pytest.raises(RuntimeError, match="needs a TPU host"):
+            common.resolve_backend("glm_grad", interpret=False)
+
+
+def test_resolve_backend_rejects_unknown():
+    with pytest.raises(KeyError):
+        common.resolve_backend("no_such_kernel")
+    with pytest.raises(ValueError, match="not registered"):
+        common.resolve_backend("glm_grad", backend="cuda")
+
+
+def test_caps_reject_sparse_calls_on_dense_only_impls():
+    dense_only = common.Caps()
+    assert dense_only.supports({"dtype": "float32"})
+    assert not dense_only.supports({"dtype": "float32", "sparse": True})
+    assert common.Caps(sparse=True).supports({"sparse": True})
+
+
+def test_caps_route_huge_sparse_problem_to_reference():
+    info = {"dtype": "float32", "sparse": True, "n": 10_000, "d": 1_000_000}
+    assert common.resolve_backend("glm_sparse", info=info) == common.REFERENCE
+    info["d"] = 20_958
+    assert (common.resolve_backend("glm_sparse", info=info)
+            != common.REFERENCE)
+
+
+def test_glm_sparse_legacy_interpret_respects_budget(monkeypatch, ell_data):
+    """interpret= picks the Pallas flavor in budget, but never forces the
+    one-hot kernel onto problems the VMEM/FLOP budget excludes."""
+    seen = []
+    real = common.dispatch
+
+    def spy(kernel, *a, **kw):
+        seen.append(kw.get("backend"))
+        return real(kernel, *a, **kw)
+
+    monkeypatch.setattr(common, "dispatch", spy)
+    values, indices, y, w = ell_data(32, 256, 4)
+    ell_glm_grad("lr", w, values, indices, y, interpret=True, d_block=128)
+    assert seen[-1] == common.PALLAS_INTERPRET
+    big_w = jnp.zeros(40_000)  # d > _MAX_D_PALLAS
+    ell_glm_grad("lr", big_w, values, indices, y, interpret=True)
+    assert seen[-1] is None  # auto: caps route the call to reference
+
+
+def test_caps_route_odd_head_dim_to_reference(attn_data):
+    q, k, v = attn_data(1, 2, 2, 16, 16, 12)  # hd=12: not sublane-aligned
+    assert (common.resolve_backend("flash_attn",
+                                   info={"dtype": "float32", "head_dim": 12})
+            == common.REFERENCE)
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, attention_ref(q, k, v, causal=True),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# glm_grad: dense sum-gradient
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", common.available_backends("glm_grad"))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("task", TASKS)
+def test_glm_grad_conformance(backend, dtype, task, glm_data):
+    X, y, w = glm_data(96, 50, dtype)
+    ref = glm_grad_ref(task, *_f32(w, X, y))
+    out = glm_grad(task, w, X, y, backend=backend, block_rows=16)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("backend", common.available_backends("glm_grad"))
+def test_glm_grad_col_layout_conformance(backend, glm_data):
+    X, y, w = glm_data(64, 40)
+    ref = glm_grad_ref("lr", w, X, y)
+    out = glm_grad("lr", w, X, y, backend=backend, layout="col", block_rows=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# glm_sgd: fused epoch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", common.available_backends("glm_sgd"))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("task", TASKS)
+@pytest.mark.parametrize("mb", [1, 4])
+def test_glm_sgd_conformance(backend, dtype, task, mb, glm_data):
+    X, y, w = glm_data(32, 40, dtype)
+    ref = glm_sgd_epoch_ref(task, *_f32(w, X, y), 0.02, mb)
+    out = glm_sgd_epoch(task, w, X, y, step=0.02, micro_batch=mb,
+                        backend=backend)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# glm_sparse: ELL sum-gradient
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", common.available_backends("glm_sparse"))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("task", TASKS)
+def test_glm_sparse_conformance(backend, dtype, task, ell_data):
+    values, indices, y, w = ell_data(64, 384, 8, dtype)
+    ref = ell_glm_grad_ref(task, *_f32(w, values), indices, y.astype(jnp.float32))
+    out = ell_glm_grad(task, w, values, indices, y, backend=backend,
+                       block_rows=8, d_block=128)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn: blocked attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", common.available_backends("flash_attn"))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, None)])
+def test_flash_attn_conformance(backend, dtype, causal, window, attn_data):
+    q, k, v = attn_data(2, 4, 2, 64, 64, 32, dtype)
+    kr = jnp.repeat(k, 2, axis=1)
+    vr = jnp.repeat(v, 2, axis=1)
+    ref = attention_ref(*_f32(q, kr, vr), causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          backend=backend, block_q=16, block_k=16)
+    loose = jnp.dtype(dtype) == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref,
+        rtol=0.05 if loose else 1e-3, atol=0.05 if loose else 2e-3)
+
+
+@pytest.mark.parametrize("backend", common.available_backends("flash_attn"))
+def test_flash_attn_decode_conformance(backend, attn_data):
+    q, k, v = attn_data(2, 4, 2, 1, 64, 16)
+    ref = attention_ref(q, jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1),
+                        causal=True)
+    out = flash_attention(q, k, v, causal=True, backend=backend,
+                          block_q=1, block_k=16)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend agreement: the dispatch paths agree with each other, not
+# just with the oracle (catches oracle-shaped bugs shared by one path).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_glm_grad_backends_agree_pairwise(task, glm_data):
+    X, y, w = glm_data(48, 30)
+    outs = [np.asarray(glm_grad(task, w, X, y, backend=b, block_rows=16))
+            for b in common.available_backends("glm_grad")]
+    for other in outs[1:]:
+        np.testing.assert_allclose(outs[0], other, rtol=1e-4, atol=2e-3)

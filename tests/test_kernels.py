@@ -15,18 +15,11 @@ from repro.kernels.flash_attn import flash_attention
 from repro.kernels.flash_attn.ref import attention_ref
 
 
-def _xyw(rng, n, d, dtype=np.float32):
-    X = jnp.asarray(rng.normal(0, 1, (n, d)).astype(dtype))
-    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(dtype))
-    w = jnp.asarray(rng.normal(0, 0.1, d).astype(dtype))
-    return X, y, w
-
-
 @pytest.mark.parametrize("task", ["lr", "svm"])
 @pytest.mark.parametrize("layout", ["row", "col"])
 @pytest.mark.parametrize("n,d", [(64, 54), (200, 16), (96, 300), (32, 128)])
-def test_glm_grad_kernel(task, layout, n, d, rng):
-    X, y, w = _xyw(rng, n, d)
+def test_glm_grad_kernel(task, layout, n, d, glm_data):
+    X, y, w = glm_data(n, d)
     ref = glm_grad_ref(task, w, X, y)
     out = glm_grad(task, w, X, y, layout=layout, block_rows=16)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
@@ -35,8 +28,8 @@ def test_glm_grad_kernel(task, layout, n, d, rng):
 @pytest.mark.parametrize("task", ["lr", "svm"])
 @pytest.mark.parametrize("mb", [1, 4, 16])
 @pytest.mark.parametrize("n,d", [(32, 54), (64, 130)])
-def test_glm_sgd_kernel(task, mb, n, d, rng):
-    X, y, w = _xyw(rng, n, d)
+def test_glm_sgd_kernel(task, mb, n, d, glm_data):
+    X, y, w = glm_data(n, d)
     ref = glm_sgd_epoch_ref(task, w, X, y, 0.02, mb)
     out = glm_sgd_epoch(task, w, X, y, step=0.02, micro_batch=mb)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

@@ -26,6 +26,7 @@ def test_mini_mesh_sync_lowering_compiles():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro import configs
         from repro.launch import specs as S
+        from repro.roofline import hlo
         from repro.train import trainer
         from repro.optim.sgd import sgd
 
@@ -45,7 +46,7 @@ def test_mini_mesh_sync_lowering_compiles():
                                NamedSharding(mesh, P()))).lower(
                 p_shapes, o_shapes, b_shapes)
             compiled = lowered.compile()
-        ca = compiled.cost_analysis()
+        ca = hlo.cost_analysis_dict(compiled)
         print(json.dumps({'flops': ca.get('flops', -1),
                           'ok': True}))
     """)

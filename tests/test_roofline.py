@@ -81,7 +81,7 @@ def test_real_compiled_module_roundtrip():
     w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     compiled = jax.jit(f).lower(x, w).compile()
     a = hlo.analyze(compiled.as_text())
-    ca_flops = compiled.cost_analysis()["flops"]
+    ca_flops = hlo.cost_analysis_dict(compiled)["flops"]
     per_iter = 2 * 64 * 64 * 64
     assert a.dot_flops == pytest.approx(10 * per_iter, rel=0.01)
     assert ca_flops == pytest.approx(per_iter, rel=0.1)   # the XLA gotcha

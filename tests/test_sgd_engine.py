@@ -31,6 +31,45 @@ def test_partition_rep_k_halo():
             parts[r, -3:], parts[(r + 1) % 4, :3])
 
 
+def test_partition_rep_k_exceeds_per_wraps_across_partitions():
+    """rep_k > per: the halo wraps past the next partition (cyclic stream)."""
+    parts = sgd.partition_indices(16, 4, "chunk", rep_k=6)  # per = 4
+    assert parts.shape == (4, 10)
+    for r in range(4):
+        stream = np.concatenate([parts[(r + 1) % 4, :4], parts[(r + 2) % 4, :4]])
+        np.testing.assert_array_equal(parts[r, 4:], stream[:6])
+    # indices stay in range even when the halo wraps all the way around
+    full = sgd.partition_indices(16, 4, "chunk", rep_k=16)
+    assert full.min() >= 0 and full.max() < 16
+
+
+@pytest.mark.parametrize("n", [64, 66])  # 66: n % replicas != 0 (tail dropped)
+def test_round_robin_and_chunk_cover_the_same_examples(n):
+    """Access path changes the assignment, never the covered example set."""
+    ch = sgd.partition_indices(n, 4, "chunk")
+    rr = sgd.partition_indices(n, 4, "round_robin")
+    assert ch.shape == rr.shape == (4, n // 4)
+    assert sorted(ch.reshape(-1).tolist()) == sorted(rr.reshape(-1).tolist())
+    assert sorted(ch.reshape(-1).tolist()) == list(range(4 * (n // 4)))
+
+
+def test_run_result_never_converging():
+    """epochs_to/time_to return None when the target is never reached."""
+    res = sgd.RunResult(
+        losses=np.asarray([1.0, 0.9, 0.85]),
+        epoch_times=np.asarray([0.1, 0.2]),
+        strategy="sync", task="lr",
+    )
+    assert res.epochs_to(0.5) is None
+    assert res.time_to(0.5) is None
+    # converging at init: zero epochs, zero time
+    assert res.epochs_to(1.0) == 0
+    assert res.time_to(1.0) == 0.0
+    # converging mid-run sums only the epochs actually spent
+    assert res.epochs_to(0.9) == 1
+    assert res.time_to(0.9) == pytest.approx(0.1)
+
+
 def test_merge_replicas_mean():
     W = jnp.asarray(np.arange(12, dtype=np.float32).reshape(4, 3))
     M = sgd.merge_replicas(W)
@@ -65,6 +104,43 @@ def test_paper_claim_rep_k_improves_statistical_efficiency(ds):
     resk = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=4,
                                            rep_k=16), 6)
     assert resk.losses[-1] <= res0.losses[-1] * 1.001
+
+
+def test_sync_engine_kernel_backend_matches_xla_path(ds):
+    """SyncSGD routed through the kernel dispatch registry reproduces the
+    inline-XLA epoch (full-batch via glm_grad, mini-batch via glm_sgd)."""
+    from repro.kernels import common as kcommon
+
+    X, y = jnp.asarray(ds.X[:64]), jnp.asarray(ds.y[:64])
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    for batch in (None, 16):
+        base = sgd.run(prob, sgd.SyncSGD(batch=batch), 3, record_time=False)
+        for backend in kcommon.available_backends("glm_grad"):
+            res = sgd.run(
+                prob, sgd.SyncSGD(batch=batch, kernel_backend=backend), 3,
+                record_time=False)
+            np.testing.assert_allclose(res.losses, base.losses,
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_sync_engine_kernel_backend_sparse_full_batch(ds):
+    """Sparse full-batch SyncSGD routes through glm_sparse; mini-batch has
+    no sparse epoch kernel and must refuse rather than silently fall back."""
+    from repro.kernels import common as kcommon
+
+    sp = synthetic.make_sparse("sp-engine", 64, 128, 5.0, 8, seed=4)
+    prob = ("lr", sp.ell, jnp.asarray(sp.y), 0.05)
+    base = sgd.run(prob, sgd.SyncSGD(), 3, sparse_data=True,
+                   record_time=False)
+    for backend in kcommon.available_backends(
+            "glm_sparse", info={"sparse": True, "n": 64, "d": 128}):
+        res = sgd.run(prob, sgd.SyncSGD(kernel_backend=backend), 3,
+                      sparse_data=True, record_time=False)
+        np.testing.assert_allclose(res.losses, base.losses,
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="full-batch"):
+        sgd.make_epoch_fn(prob, sgd.SyncSGD(batch=16, kernel_backend="reference"),
+                          sparse_data=True)
 
 
 def test_access_path_changes_assignment_not_semantics(ds):
