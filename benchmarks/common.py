@@ -1,4 +1,4 @@
-"""Shared benchmark utilities.
+"""Shared benchmark utilities — thin glue over the study subsystem.
 
 The container is a single-core CPU host, so the paper's CPU/GPU hardware
 axis is reproduced as *execution paths* of the same math (see DESIGN.md §2):
@@ -13,21 +13,22 @@ axis is reproduced as *execution paths* of the same math (see DESIGN.md §2):
 
 Datasets are synthetic stand-ins matching Table 3 statistics, scaled by
 --profile (ci: tiny / paper: larger) for single-core wall-clock sanity.
+
+Sweep execution goes through ``repro.study``: every (dataset, task,
+strategy, step) cell is a ``TrialSpec`` executed by the module-level
+``RUNNER`` — step grids run vmap-stacked, results land in the on-disk
+trial cache (interrupted sweeps resume; repeated sweeps are pure cache
+reads), and, when the driver attaches a ``StudyStore``, every trial is
+recorded into ``BENCH_study.json``.
 """
 from __future__ import annotations
 
 import csv
-import dataclasses
-import sys
-import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import glm, sgd, convergence
-from repro.data import synthetic
+from repro.study import runner as runner_mod
+from repro.study import spec as spec_mod
+from repro.study import tuner as tuner_mod
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "bench_results"
 
@@ -41,37 +42,31 @@ PROFILES = {
 
 TASKS = ("lr", "svm")
 
+#: shared trial runner: one dataset memo + trial cache for the whole sweep;
+#: the driver (benchmarks.run) attaches a StudyStore to record every trial
+RUNNER = runner_mod.Runner(cache_dir=RESULTS_DIR / "study_cache")
+
+
+def dataset_spec(name: str, profile: str) -> spec_mod.DatasetSpec:
+    return spec_mod.DatasetSpec(name, max_n=PROFILES[profile]["max_n"])
+
 
 def load(name: str, profile: str):
-    p = PROFILES[profile]
-    scale = 1.0  # max_n caps the size; keep sparsity profile
-    return synthetic.paper_dataset(name, scale=scale, max_n=p["max_n"])
+    """The materialized dataset (memoized in the shared runner)."""
+    return RUNNER.dataset(dataset_spec(name, profile))
 
 
-def problem_for(ds, task: str, step: float):
-    if ds.dense:
-        return glm.GLMProblem(task, jnp.asarray(ds.X), jnp.asarray(ds.y),
-                              step), False
-    return (task, ds.ell, jnp.asarray(ds.y), step), True
+def tune(dspec: spec_mod.DatasetSpec, task: str, strategy, epochs: int,
+         steps=(1e-3, 1e-2, 1e-1)):
+    """Mini grid search (paper §6.1) through the study tuner.
 
-
-def run_config(ds, task, strategy, step, epochs):
-    prob, sp = problem_for(ds, task, step)
-    return sgd.run(prob, strategy, epochs, sparse_data=sp)
-
-
-def best_over_steps(ds, task, strategy, epochs, steps=(1e-3, 1e-2, 1e-1)):
-    """Mini grid search (paper §6.1): best time-to-lowest-seen loss."""
-    runs = {s: run_config(ds, task, strategy, s, epochs) for s in steps}
-    opt = convergence.optimal_loss(runs.values())
-    target = opt * 1.01 if opt > 0 else opt * 0.99
-    best, best_key = None, None
-    for s, r in runs.items():
-        t = r.time_to(target)
-        key = (0, t) if t is not None else (1, float(r.losses[-1]))
-        if best_key is None or key < best_key:
-            best, best_key = (s, r), key
-    return best[0], best[1], target
+    Returns ``(best_step, best_result, target)`` like the old inline
+    helper, but cached, stacked, and store-recorded.
+    """
+    base = spec_mod.TrialSpec(dataset=dspec, task=task, strategy=strategy,
+                              step=steps[0], epochs=epochs)
+    t = tuner_mod.tune_step(RUNNER, base, steps=steps)
+    return t.best_step, t.best_result, t.target
 
 
 def write_csv(rows: list[dict], name: str):

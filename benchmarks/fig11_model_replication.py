@@ -17,15 +17,16 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"][:2]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
+        n = dspec.profile().n
         for task in ("lr",):
             per = {}
             for label, r in LEVELS.items():
-                if ds.n < r * 2:
+                if n < r * 2:
                     continue
                 strat = sgd.AsyncLocalSGD(replicas=r, local_batch=1)
-                step, res, target = common.best_over_steps(
-                    ds, task, strat, p["epochs"], steps=(1e-2, 1e-1))
+                step, res, target = common.tune(
+                    dspec, task, strat, p["epochs"], steps=(1e-2, 1e-1))
                 per[label] = res
             best = min(float(np.nanmin(r.losses)) for r in per.values())
             target = best * 1.01 if best > 0 else best * 0.99

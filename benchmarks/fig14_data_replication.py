@@ -16,13 +16,13 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"][:2]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
         for task in ("lr",):
             per = {}
             for k in KS:
                 strat = sgd.AsyncLocalSGD(replicas=8, local_batch=1, rep_k=k)
-                step, res, target = common.best_over_steps(
-                    ds, task, strat, p["epochs"], steps=(1e-2, 1e-1))
+                step, res, target = common.tune(
+                    dspec, task, strat, p["epochs"], steps=(1e-2, 1e-1))
                 per[k] = res
             best = min(float(np.nanmin(r.losses)) for r in per.values())
             target = best * 1.01 if best > 0 else best * 0.99

@@ -15,12 +15,12 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
         for task in common.TASKS:
-            _, sync_res, _ = common.best_over_steps(
-                ds, task, sgd.SyncSGD(), p["epochs"])
-            _, async_res, _ = common.best_over_steps(
-                ds, task, sgd.AsyncLocalSGD(replicas=8, local_batch=1),
+            _, sync_res, _ = common.tune(
+                dspec, task, sgd.SyncSGD(), p["epochs"])
+            _, async_res, _ = common.tune(
+                dspec, task, sgd.AsyncLocalSGD(replicas=8, local_batch=1),
                 p["epochs"], steps=(1e-2, 1e-1))
             best = min(float(np.nanmin(sync_res.losses)),
                        float(np.nanmin(async_res.losses)))

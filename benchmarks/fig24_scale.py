@@ -1,17 +1,36 @@
 """Paper Fig 24/25: scalability in #examples (N) and #features (d).
 
 Asserts ~linear time/epoch growth in N and records growth in d; the
-relative ordering of the algorithms is expected to be preserved."""
+relative ordering of the algorithms is expected to be preserved.  Async
+epochs run as study trials (explicit-shape ``DatasetSpec``s, so the
+scaling sweep is cached/resumable); the sync point is a direct fused-
+gradient timing."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common
 from repro.core import glm, sgd
-from repro.data import synthetic
+from repro.study import spec as spec_mod
 from repro.utils.timing import median_time
+
+
+def _point(axis: str, name: str, n: int, d: int, seed: int):
+    dspec = spec_mod.DatasetSpec(name, n=n, d=d, seed=seed)
+    ds = common.RUNNER.dataset(dspec)
+    X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
+    w = jnp.zeros(d)
+    sync = jax.jit(lambda w: w - 1e-3 * glm.grad_fused("lr", w, X, y))
+    t_sync = median_time(sync, w, warmup=1, iters=3)
+    trial = spec_mod.TrialSpec(
+        dataset=dspec, task="lr",
+        strategy=sgd.AsyncLocalSGD(replicas=8, local_batch=1),
+        step=1e-2, epochs=4)
+    res = common.RUNNER.run_trial(trial)
+    return dict(axis=axis, value=(n if axis == "N" else d), d=d,
+                t_epoch_sync_ms=1e3 * t_sync,
+                t_epoch_async_ms=1e3 * res.time_per_epoch)
 
 
 def run(profile: str = "ci"):
@@ -19,28 +38,10 @@ def run(profile: str = "ci"):
     rows = []
     # scale N at fixed d (covtype-style dense)
     for n in ((512, 1024, 2048) if small else (2048, 8192, 16384)):
-        ds = synthetic.make_dense("covtype-n", n, 54, seed=0)
-        X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
-        w = jnp.zeros(54)
-        sync = jax.jit(lambda w: w - 1e-3 * glm.grad_fused("lr", w, X, y))
-        t_sync = median_time(sync, w, warmup=1, iters=3)
-        prob = glm.GLMProblem("lr", X, y, 1e-2)
-        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=1), 4)
-        rows.append(dict(axis="N", value=n, d=54,
-                         t_epoch_sync_ms=1e3 * t_sync,
-                         t_epoch_async_ms=1e3 * res.time_per_epoch))
+        rows.append(_point("N", "covtype-n", n, 54, seed=0))
     # scale d at fixed N
     for d in ((32, 128, 512) if small else (54, 300, 2048)):
-        ds = synthetic.make_dense("dense-d", 1024, d, seed=1)
-        X, y = jnp.asarray(ds.X), jnp.asarray(ds.y)
-        w = jnp.zeros(d)
-        sync = jax.jit(lambda w: w - 1e-3 * glm.grad_fused("lr", w, X, y))
-        t_sync = median_time(sync, w, warmup=1, iters=3)
-        prob = glm.GLMProblem("lr", X, y, 1e-2)
-        res = sgd.run(prob, sgd.AsyncLocalSGD(replicas=8, local_batch=1), 4)
-        rows.append(dict(axis="d", value=d, d=d,
-                         t_epoch_sync_ms=1e3 * t_sync,
-                         t_epoch_async_ms=1e3 * res.time_per_epoch))
+        rows.append(_point("d", "dense-d", 1024, d, seed=1))
     common.write_csv(rows, "fig24_scale.csv")
     return rows
 

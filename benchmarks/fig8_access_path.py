@@ -19,14 +19,14 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"][:2]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
         for task in ("lr",):
             per = {}
             for access in ("chunk", "round_robin"):
                 strat = sgd.AsyncLocalSGD(replicas=8, local_batch=1,
                                           access=access)
-                step, res, target = common.best_over_steps(
-                    ds, task, strat, p["epochs"])
+                step, res, target = common.tune(
+                    dspec, task, strat, p["epochs"])
                 per[access] = (res, target)
             best = min(float(np.nanmin(r.losses)) for r, _ in per.values())
             target = best * 1.01 if best > 0 else best * 0.99

@@ -1,9 +1,16 @@
 """Benchmark driver: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--profile ci|paper] [--only X]
+    PYTHONPATH=src python -m benchmarks.run [--profile ci|paper]
+        [--only mod1,mod2] [--out-json BENCH_study.json]
 
 Emits CSVs into bench_results/ and prints a summary, then validates the
-paper's qualitative claims against the measured rows (exit 1 on violation).
+paper's qualitative claims (repro.study.claims) against the measured
+rows (exit 1 on violation).  Every trial the sweep executes is recorded
+through repro.study.store into the structured results file (--out-json,
+default BENCH_study.json) plus an append-only JSONL run log — the repo's
+machine-readable perf trajectory.  Trials are cached under
+bench_results/study_cache/: re-running a finished sweep is a pure cache
+read and reproduces BENCH_study.json byte-for-byte.
 """
 from __future__ import annotations
 
@@ -15,6 +22,8 @@ from benchmarks import (bench_kernels, common, fig8_access_path,
                         fig11_model_replication, fig14_data_replication,
                         fig22_sync_vs_async, fig24_scale, table4_sync,
                         table6_optimal, table7_async)
+from repro.study import claims
+from repro.study.store import StudyStore
 
 MODULES = {
     "table4_sync": table4_sync,
@@ -29,77 +38,44 @@ MODULES = {
 }
 
 
-def validate(results: dict) -> list[str]:
-    """Paper-claim checks over the measured rows; returns violations."""
-    bad = []
-
-    for r in results.get("table4_sync", []):
-        if not r["paths_statistically_identical"]:
-            bad.append(f"table4: fused != composition on {r['dataset']}"
-                       f"/{r['task']} (sync statistical identity broken)")
-        if r["speedup_sync_vs_seq"] < 1.0:
-            bad.append(f"table4: batch path slower than sequential on "
-                       f"{r['dataset']}/{r['task']}")
-
-    # model replication: more replicas never improves statistical efficiency
-    by_key = {}
-    for r in results.get("fig11_model_replication", []):
-        by_key.setdefault((r["dataset"], r["task"]), []).append(r)
-    for key, rs in by_key.items():
-        rs = sorted(rs, key=lambda r: r["replicas"])
-        losses = [r["final_loss"] for r in rs]
-        if losses[-1] < losses[0] * 0.98:   # thread beating kernel outright
-            bad.append(f"fig11: replication improved statistical efficiency "
-                       f"on {key} (unexpected): {losses}")
-
-    # data replication: rep-k costs hardware efficiency
-    by_key = {}
-    for r in results.get("fig14_data_replication", []):
-        by_key.setdefault((r["dataset"], r["task"]), []).append(r)
-    for key, rs in by_key.items():
-        rs = sorted(rs, key=lambda r: r["rep_k"])
-        # single-core CI timings are noisy at sub-ms epochs: only flag a
-        # clear (>=30%) inversion of the expected rep-k hardware cost
-        if rs[-1]["t_epoch_ms"] < rs[0]["t_epoch_ms"] * 0.7:
-            bad.append(f"fig14: rep-10 cheaper than rep-0 on {key}")
-
-    for r in results.get("bench_kernels", []):
-        if not r["pallas_matches_ref"]:
-            bad.append(f"kernels: pallas mismatch at n={r['n']} d={r['d']}")
-
-    n_rows = [r for r in results.get("fig24_scale", []) if r["axis"] == "N"]
-    if len(n_rows) >= 2:
-        t0, t1 = n_rows[0], n_rows[-1]
-        growth = t1["t_epoch_async_ms"] / max(t0["t_epoch_async_ms"], 1e-9)
-        size = t1["value"] / t0["value"]
-        if growth > size * 3:
-            bad.append(f"fig24: async time grew {growth:.1f}x for {size:.0f}x "
-                       f"data (super-linear)")
-    return bad
-
-
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="ci", choices=list(common.PROFILES))
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (default: all)")
+    ap.add_argument("--out-json", default="BENCH_study.json",
+                    help="structured results path (repro.study.store)")
+    args = ap.parse_args(argv)
+
+    selected = list(MODULES)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in MODULES]
+        if unknown:
+            ap.error(f"unknown modules {unknown}; known: {list(MODULES)}")
+
+    store = StudyStore(args.out_json,
+                       jsonl_path=common.RESULTS_DIR / "study_runs.jsonl")
+    common.RUNNER.store = store
 
     results = {}
     t00 = time.time()
-    for name, mod in MODULES.items():
-        if args.only and args.only != name:
-            continue
+    for name in selected:
         t0 = time.time()
         print(f"== {name} ==", flush=True)
-        results[name] = mod.run(args.profile)
+        results[name] = MODULES[name].run(args.profile)
         for row in results[name]:
             print("  " + ", ".join(f"{k}={common.fmt(v)}"
                                    for k, v in row.items()))
         print(f"   ({time.time()-t0:.1f}s)")
 
-    violations = validate(results)
+    violations = claims.validate(results)
+    store.record_claims(violations, checked_modules=list(results))
+    out = store.write()
     print(f"\ntotal {time.time()-t00:.1f}s; "
-          f"{sum(len(v) for v in results.values())} rows")
+          f"{sum(len(v) for v in results.values())} rows; "
+          f"{len(store.trials)} trials -> {out} "
+          f"({common.RUNNER.cache.hits} cache hits)")
     if violations:
         print("PAPER-CLAIM VIOLATIONS:")
         for v in violations:

@@ -55,12 +55,13 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"]:
+        dspec = common.dataset_spec(name, profile)
         ds = common.load(name, profile)
         for task in common.TASKS:
             t = _sync_paths(ds, task, 1e-3)
             strategy = sgd.SyncSGD()
-            step, res, target = common.best_over_steps(
-                ds, task, strategy, p["epochs"])
+            step, res, target = common.tune(
+                dspec, task, strategy, p["epochs"])
             iters = res.epochs_to(target)
             rows.append(dict(
                 dataset=name, task=task,

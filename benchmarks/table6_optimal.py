@@ -1,54 +1,37 @@
-"""Paper Table 6: optimal async configuration per dataset/task.
+"""Paper Table 6: optimal configuration per dataset/task.
 
-Sweeps the design space {access path} x {replication level} x {rep-k} and
-reports the configuration with the fastest time to 1% error — reproducing
-the paper's finding that the optimum is dataset/task-dependent (no single
+Delegates to ``repro.study.advisor`` — the subsystem's Table-6 search:
+the design space {sync} ∪ {access path} × {replication level} × {rep-k}
+is step-tuned per cell (§6.1) and ranked by measured time to 1% error
+(``rank="measured"``, the paper's protocol) — reproducing the paper's
+finding that the optimum is dataset/task-dependent (no single
 configuration wins everywhere)."""
 from __future__ import annotations
 
-import numpy as np
+import math
 
 from benchmarks import common
-from repro.core import sgd
-
-
-def space(n):
-    for access in ("chunk", "round_robin"):
-        for replicas in (4, 16, 64):
-            if n < replicas * 2:
-                continue
-            for rep_k in (0, 10):
-                yield sgd.AsyncLocalSGD(replicas=replicas, local_batch=1,
-                                        access=access, rep_k=rep_k)
+from repro.study import advisor
 
 
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
+    caps = advisor.HostCaps.detect()
     rows = []
     for name in p["datasets"]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
         for task in common.TASKS:
-            results = {}
-            for strat in space(ds.n):
-                step, res, target = common.best_over_steps(
-                    ds, task, strat, max(6, p["epochs"] // 2),
-                    steps=(1e-2, 1e-1))
-                results[strat.name] = (res, step)
-            best_loss = min(float(np.nanmin(r.losses))
-                            for r, _ in results.values())
-            target = best_loss * 1.01 if best_loss > 0 else best_loss * 0.99
-            scored = {}
-            for label, (res, step) in results.items():
-                t = res.time_to(target)
-                scored[label] = (np.inf if t is None else t, res, step)
-            opt = min(scored, key=lambda k: scored[k][0])
+            rec = advisor.recommend(
+                dspec, caps, task=task, runner=common.RUNNER,
+                steps=(1e-2, 1e-1), epochs=max(6, p["epochs"] // 2),
+                rank="measured")
+            best = rec.best
             rows.append(dict(
-                dataset=name, task=task, optimal_config=opt,
-                time_to_1pct_s=None if np.isinf(scored[opt][0])
-                else scored[opt][0],
-                n_configs_tried=len(scored),
-                n_configs_converged=sum(1 for v in scored.values()
-                                        if np.isfinite(v[0])),
+                dataset=name, task=task, optimal_config=best.name,
+                time_to_1pct_s=best.measured_time_to_target_s,
+                n_configs_tried=len(rec.ranked),
+                n_configs_converged=sum(
+                    1 for r in rec.ranked if math.isfinite(r.score)),
             ))
     common.write_csv(rows, "table6_optimal.csv")
     return rows

@@ -26,14 +26,15 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
     for name in p["datasets"]:
-        ds = common.load(name, profile)
+        dspec = common.dataset_spec(name, profile)
+        n = dspec.profile().n
         for task in common.TASKS:
             per_cfg = {}
             for label, strat in CONFIGS.items():
-                if ds.n < strat.replicas * 2:
+                if n < strat.replicas * 2:
                     continue
-                step, res, target = common.best_over_steps(
-                    ds, task, strat, p["epochs"])
+                step, res, target = common.tune(
+                    dspec, task, strat, p["epochs"])
                 per_cfg[label] = (res, target, step)
             # common target: within 1% of the best loss seen anywhere
             best = min(float(np.nanmin(r.losses))

@@ -30,6 +30,25 @@ def grid_step_sizes(lo_exp: int = -6, hi_exp: int = 2) -> list[float]:
     return [10.0 ** e for e in range(lo_exp, hi_exp + 1)]
 
 
+def rank_key(result, target: float, *, by: str = "time") -> tuple:
+    """Paper §6.1 selection order as a sort key (lower is better).
+
+    Converged runs rank first — by measured time-to-target (``by="time"``)
+    or by epochs-to-target (``by="epochs"``, deterministic under a fixed
+    seed: no wall-clock in the key); non-converged runs rank by final
+    loss; diverged (non-finite) runs rank last.  Works on any result with
+    ``losses`` / ``time_to`` / ``epochs_to`` (``sgd.RunResult`` and the
+    study runner's ``TrialResult``).
+    """
+    last = float(result.losses[-1])
+    if not np.isfinite(last):
+        return (2, math.inf)
+    hit = result.time_to(target) if by == "time" else result.epochs_to(target)
+    if hit is None:
+        return (1, last)
+    return (0, float(hit))
+
+
 @dataclasses.dataclass
 class GridSearchResult:
     best_step: float
@@ -50,6 +69,10 @@ def grid_search_step(
 
     ``make_problem(step) -> problem`` lets the caller embed the step size.
     Falls back to lowest final loss when no step reaches the target.
+
+    This is the low-level, problem-object API.  Sweeps expressed as
+    ``study.spec.TrialSpec``s should use ``study.tuner.tune_step`` — same
+    selection rule, but with trial caching and vmap-stacked step grids.
     """
     steps = list(steps) if steps is not None else grid_step_sizes()
     results: dict[float, sgd_mod.RunResult] = {}
@@ -59,9 +82,7 @@ def grid_search_step(
         results[s] = res
         if not np.isfinite(res.losses[-1]):
             continue  # diverged
-        t = res.time_to(target)
-        # rank: converged runs by time, non-converged by final loss (worse)
-        key = (0, t) if t is not None else (1, float(res.losses[-1]))
+        key = rank_key(res, target)
         if best_key is None or key < best_key:
             best_key, best_step = key, s
     if best_step is None:  # everything diverged: pick smallest step

@@ -88,6 +88,12 @@ class AsyncLocalSGD:
                   epoch (e.g. 0.25 ⇒ 4 merges/epoch).  Staleness knob.
     access        example→replica assignment (row-rr vs row-ch).
     rep_k         halo data replication (paper §5.2.3).
+
+    ``kernel_backend`` mirrors ``SyncSGD.kernel_backend``: replica epochs
+    route through the kernel dispatch registry (dense → glm_sgd's fused
+    epoch vmapped over the replica axis; sparse → glm_sparse, which is a
+    sum-gradient kernel and therefore needs full-partition local updates,
+    ``local_batch`` == partition size).  None keeps the pure-XLA path.
     """
 
     replicas: int = 8
@@ -96,13 +102,17 @@ class AsyncLocalSGD:
     access: AccessPath = "chunk"
     rep_k: int = 0
     merge: MergeScheme = "mean"
+    kernel_backend: str | None = None
 
     @property
     def name(self) -> str:
-        return (
+        base = (
             f"async-r{self.replicas}-b{self.local_batch}"
             f"-m{self.merge_every}-{self.access[:5]}-rep{self.rep_k}"
         )
+        if self.kernel_backend:
+            base += f"[{self.kernel_backend}]"
+        return base
 
 
 # ---------------------------------------------------------------------------
@@ -209,26 +219,47 @@ class RunResult:
 
 
 def make_epoch_fn(
-    problem: glm.GLMProblem | tuple, strategy, *, sparse_data: bool = False
+    problem: glm.GLMProblem | tuple,
+    strategy,
+    *,
+    sparse_data: bool = False,
+    step_param: bool = False,
 ):
     """Build a jitted ``(w_state) -> w_state`` epoch function + initial state.
 
     Returns ``(init_state, epoch_fn, loss_fn, merges_per_epoch)``.  For
     SyncSGD the state is ``w [d]``; for AsyncLocalSGD it is ``W [R, d]``.
+
+    With ``step_param=True`` the epoch function takes ``(state, step)``
+    with the step size as a traced scalar instead of baking the problem's
+    step in — the study runner vmaps it over a stacked step axis to run a
+    whole §6.1 step-size grid in one program.  Kernel-backend epochs bake
+    the step statically (it is a kernel compile-time constant) and refuse
+    ``step_param``.
     """
     if sparse_data:
-        task, m, y, step = problem
+        task, m, y, step0 = problem
         n, d = m.shape
     else:
-        task, X, y, step = problem.task, problem.X, problem.y, problem.step
+        task, X, y, step0 = problem.task, problem.X, problem.y, problem.step
         n, d = X.shape
         m = None
 
+    def _finalize(epoch_of_step):
+        """Bind the step statically, or expose it as a traced argument."""
+        if step_param:
+            return jax.jit(epoch_of_step)
+        return jax.jit(lambda state: epoch_of_step(state, step0))
+
     if isinstance(strategy, SyncSGD):
         batch = strategy.batch or n
+        backend = strategy.kernel_backend
+        if backend is not None and step_param:
+            raise ValueError(
+                "step_param needs kernel_backend=None (kernel epochs bake "
+                "the step size as a compile-time constant)")
 
         if sparse_data:
-            backend = strategy.kernel_backend
             if backend is not None and batch < n:
                 raise ValueError(
                     "kernel_backend on sparse data needs full-batch updates "
@@ -241,23 +272,23 @@ def make_epoch_fn(
                 def epoch(w):
                     g = _kgrad_sp(task, w, m.values, m.indices, y,
                                   backend=backend)
-                    return w - step * g
+                    return w - step0 * g
 
             else:
 
-                @jax.jit
-                def epoch(w):
+                def epoch_s(w, step):
                     if batch >= n:
                         g = sparse.grad(task, m, y, w)
                         return w - (step / n) * g * n  # alpha on sum grad
                     return sparse.minibatch_epoch(task, w, m, y, step, batch)
+
+                epoch = _finalize(epoch_s)
 
             @jax.jit
             def loss_fn(w):
                 return sparse.loss(task, m, y, w)
 
         else:
-            backend = strategy.kernel_backend
             if backend is not None:
                 # route through the kernel dispatch registry: full-batch ->
                 # glm_grad (fused sum gradient), mini-batch -> glm_sgd
@@ -269,18 +300,19 @@ def make_epoch_fn(
                 def epoch(w):
                     if batch >= n:
                         g = _kgrad(task, w, X, y, backend=backend)
-                        return w - step * g
-                    return _kepoch(task, w, X, y, step=step,
+                        return w - step0 * g
+                    return _kepoch(task, w, X, y, step=step0,
                                    micro_batch=batch, backend=backend)
 
             else:
 
-                @jax.jit
-                def epoch(w):
+                def epoch_s(w, step):
                     if batch >= n:
                         g = glm.grad_fused(task, w, X, y)
                         return w - step * g
                     return glm.minibatch_epoch(task, w, X, y, step, batch)
+
+                epoch = _finalize(epoch_s)
 
             @jax.jit
             def loss_fn(w):
@@ -291,7 +323,13 @@ def make_epoch_fn(
 
     assert isinstance(strategy, AsyncLocalSGD)
     R = strategy.replicas
+    backend = strategy.kernel_backend
+    if backend is not None and step_param:
+        raise ValueError(
+            "step_param needs kernel_backend=None (kernel epochs bake "
+            "the step size as a compile-time constant)")
     parts = partition_indices(n, R, strategy.access, strategy.rep_k)
+    per = parts.shape[1]
     merges = max(1, int(round(1.0 / strategy.merge_every))) if strategy.merge_every <= 1 else 1
     # merge_every > 1 handled by the driver (merge every int(merge_every) epochs)
 
@@ -300,14 +338,35 @@ def make_epoch_fn(
         idx_p = jnp.take(m.indices, parts, axis=0)
         y_p = jnp.take(y, parts, axis=0)
 
-        @jax.jit
-        def epoch(W):
+        if backend is not None:
+            if strategy.local_batch != per:
+                raise ValueError(
+                    "kernel_backend on sparse data needs full-partition "
+                    f"local updates: local_batch must equal the partition "
+                    f"size {per} (= n//replicas + rep_k; glm_sparse is a "
+                    "sum-gradient kernel)")
+            from repro.kernels.glm_sparse import ell_glm_grad as _kgrad_sp
+
+            def _replica_epoch(W, step):
+                def one(w, v, i, yr):
+                    g = _kgrad_sp(task, w, v, i, yr, backend=backend)
+                    return w - (step / per) * g
+
+                return jax.vmap(one)(W, vals_p, idx_p, y_p)
+
+        else:
+
+            def _replica_epoch(W, step):
+                return _sparse_replica_epoch(
+                    task, W, vals_p, idx_p, d, y_p, step, strategy.local_batch)
+
+        def epoch_s(W, step):
             for _ in range(merges):
-                W = _sparse_replica_epoch(
-                    task, W, vals_p, idx_p, d, y_p, step, strategy.local_batch
-                )
+                W = _replica_epoch(W, step)
                 W = merge_replicas(W, strategy.merge)
             return W
+
+        epoch = _finalize(epoch_s)
 
         @jax.jit
         def loss_fn(W):
@@ -317,12 +376,35 @@ def make_epoch_fn(
         Xp = jnp.take(X, parts, axis=0)              # [R, per, d]
         y_p = jnp.take(y, parts, axis=0)
 
-        @jax.jit
-        def epoch(W):
+        if backend is not None:
+            if per % strategy.local_batch != 0:
+                raise ValueError(
+                    f"kernel_backend epochs need local_batch to divide the "
+                    f"partition size {per} (= n//replicas + rep_k), got "
+                    f"{strategy.local_batch}")
+            from repro.kernels.glm_sgd import glm_sgd_epoch as _kepoch
+
+            def _replica_epoch(W, step):
+                def one(w, Xr, yr):
+                    return _kepoch(task, w, Xr, yr, step=step,
+                                   micro_batch=strategy.local_batch,
+                                   backend=backend)
+
+                return jax.vmap(one)(W, Xp, y_p)
+
+        else:
+
+            def _replica_epoch(W, step):
+                return _dense_replica_epoch(
+                    task, W, Xp, y_p, step, strategy.local_batch)
+
+        def epoch_s(W, step):
             for _ in range(merges):
-                W = _dense_replica_epoch(task, W, Xp, y_p, step, strategy.local_batch)
+                W = _replica_epoch(W, step)
                 W = merge_replicas(W, strategy.merge)
             return W
+
+        epoch = _finalize(epoch_s)
 
         @jax.jit
         def loss_fn(W):

@@ -1,0 +1,10 @@
+"""Study harness: the paper's experimental methodology as a subsystem.
+
+Dataflow (DESIGN.md §4):
+
+    spec.TrialSpec grid ──▶ tuner.tune_step ──▶ runner.Runner ──▶ store
+                                                     │
+    advisor.recommend ◀── ranked Table-6 answer ◀────┘
+                                         claims.validate ──▶ verdicts
+"""
+from repro.study import advisor, claims, runner, spec, store, tuner  # noqa: F401

@@ -1,0 +1,224 @@
+"""Trial execution: deterministic seeds, timing, caching, vmap stacking.
+
+The runner turns ``TrialSpec``s into ``TrialResult``s:
+
+* **trial cache** — results are keyed by the spec's content hash and
+  persisted as one JSON file per trial, so an interrupted sweep resumes
+  where it stopped instead of recomputing, and a repeated sweep is a
+  pure cache read (byte-identical results, which is what makes
+  ``BENCH_study.json`` reproducible across runs);
+* **vmap stacking** — trials that differ only in step size (the §6.1
+  grid) share one compiled program: the epoch function is built with
+  ``step_param=True`` and vmapped over a stacked ``[S, ...]`` state +
+  ``[S]`` step vector.  Wall time is measured for the stack and
+  amortized per trial (flagged ``stacked`` in the result meta);
+* **dataset memoization** — synthetic datasets are generated once per
+  ``DatasetSpec`` per runner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glm, sgd
+from repro.study.spec import DatasetSpec, TrialSpec, canonical_json
+
+
+@dataclasses.dataclass
+class TrialResult:
+    """One trial's measured history (mirrors ``sgd.RunResult`` + meta)."""
+
+    losses: np.ndarray          # [epochs+1] incl. the init loss
+    epoch_times: np.ndarray     # [epochs] wall seconds
+    strategy: str
+    task: str
+    cached: bool = False        # served from the trial cache
+    stacked: bool = False       # timing amortized over a step-stack
+
+    def epochs_to(self, target: float) -> int | None:
+        hit = np.nonzero(self.losses <= target)[0]
+        return int(hit[0]) if len(hit) else None
+
+    def time_to(self, target: float) -> float | None:
+        e = self.epochs_to(target)
+        if e is None:
+            return None
+        return float(np.sum(self.epoch_times[:e]))
+
+    @property
+    def time_per_epoch(self) -> float:
+        return float(np.mean(self.epoch_times))
+
+    @property
+    def final_loss(self) -> float:
+        return float(self.losses[-1])
+
+    def to_dict(self) -> dict:
+        return {
+            "losses": [float(x) for x in self.losses],
+            "epoch_times": [float(x) for x in self.epoch_times],
+            "strategy": self.strategy,
+            "task": self.task,
+            "stacked": self.stacked,
+        }
+
+    @classmethod
+    def from_dict(cls, dct: dict, *, cached: bool = False) -> "TrialResult":
+        return cls(
+            losses=np.asarray(dct["losses"], dtype=np.float64),
+            epoch_times=np.asarray(dct["epoch_times"], dtype=np.float64),
+            strategy=dct["strategy"],
+            task=dct["task"],
+            cached=cached,
+            stacked=dct.get("stacked", False),
+        )
+
+
+class TrialCache:
+    """Content-addressed on-disk cache: ``<root>/<trial.key>.json``."""
+
+    def __init__(self, root: str | Path | None):
+        self.root = Path(root) if root is not None else None
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> dict | None:
+        if self.root is None:
+            return None
+        path = self.root / f"{key}.json"
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return payload
+
+    def put(self, key: str, payload: dict) -> None:
+        if self.root is None:
+            return
+        self.root.mkdir(parents=True, exist_ok=True)
+        tmp = self.root / f".{key}.tmp.{os.getpid()}"
+        tmp.write_text(canonical_json(payload))
+        tmp.replace(self.root / f"{key}.json")  # atomic on POSIX
+
+
+def _problem(ds, task: str, step: float):
+    """(problem, sparse_data) for one loaded dataset — the engine's input."""
+    if ds.dense:
+        return glm.GLMProblem(task, jnp.asarray(ds.X), jnp.asarray(ds.y),
+                              step), False
+    return (task, ds.ell, jnp.asarray(ds.y), step), True
+
+
+def _stackable(t: TrialSpec) -> bool:
+    """Kernel-backend epochs bake the step statically → no step stacking."""
+    return getattr(t.strategy, "kernel_backend", None) is None
+
+
+class Runner:
+    """Executes trial lists with caching, stacking, and store recording."""
+
+    def __init__(self, cache_dir: str | Path | None = None, *,
+                 store=None, stack: bool = True):
+        self.cache = TrialCache(cache_dir)
+        self.store = store
+        self.stack = stack
+        self._datasets: dict[DatasetSpec, object] = {}
+
+    def dataset(self, dspec: DatasetSpec):
+        if dspec not in self._datasets:
+            self._datasets[dspec] = dspec.load()
+        return self._datasets[dspec]
+
+    # -- execution ----------------------------------------------------------
+
+    def run_trial(self, trial: TrialSpec) -> TrialResult:
+        return self.run([trial])[0]
+
+    def run(self, trials: Sequence[TrialSpec]) -> list[TrialResult]:
+        """Run every trial (cache-first), preserving input order."""
+        results: list[TrialResult | None] = [None] * len(trials)
+        pending: dict[str, list[int]] = {}
+        for i, t in enumerate(trials):
+            payload = self.cache.get(t.key)
+            if payload is not None:
+                results[i] = TrialResult.from_dict(payload, cached=True)
+            else:
+                pending.setdefault(t.stack_key, []).append(i)
+
+        for indices in pending.values():
+            group = [trials[i] for i in indices]
+            if self.stack and len(group) > 1 and _stackable(group[0]):
+                outs = self._run_stacked(group)
+            else:
+                outs = [self._run_single(t) for t in group]
+            for i, t, res in zip(indices, group, outs):
+                results[i] = res
+                self.cache.put(t.key, res.to_dict())
+
+        for t, res in zip(trials, results):
+            if self.store is not None:
+                self.store.record_trial(t, res)
+        return results  # type: ignore[return-value]
+
+    def _run_single(self, t: TrialSpec) -> TrialResult:
+        ds = self.dataset(t.dataset)
+        problem, sparse_data = _problem(ds, t.task, t.step)
+        r = sgd.run(problem, t.strategy, t.epochs, sparse_data=sparse_data)
+        return TrialResult(losses=np.asarray(r.losses, dtype=np.float64),
+                           epoch_times=np.asarray(r.epoch_times,
+                                                  dtype=np.float64),
+                           strategy=t.strategy.name, task=t.task)
+
+    def _run_stacked(self, group: Sequence[TrialSpec]) -> list[TrialResult]:
+        """One compiled program for a whole step grid (same-shape configs).
+
+        Mirrors ``sgd.run``'s timing protocol: the first epoch includes
+        compilation and its time is replaced by the median of the rest;
+        stack wall time is amortized evenly over the S member trials
+        (they execute fused, so per-trial attribution is 1/S by
+        construction — same strategy, same shapes, same program).
+        """
+        base = group[0]
+        ds = self.dataset(base.dataset)
+        problem, sparse_data = _problem(ds, base.task, base.step)
+        init, epoch_fn, loss_fn, _ = sgd.make_epoch_fn(
+            problem, base.strategy, sparse_data=sparse_data, step_param=True)
+        S = len(group)
+        steps = jnp.asarray([t.step for t in group], dtype=jnp.float32)
+        state = jnp.stack([init] * S)
+        epoch_v = jax.jit(jax.vmap(epoch_fn))
+        loss_v = jax.jit(jax.vmap(loss_fn))
+
+        losses = [np.asarray(loss_v(state), dtype=np.float64)]
+        times: list[float] = []
+        state = epoch_v(state, steps)          # warmup epoch (compiles)
+        jax.block_until_ready(state)
+        losses.append(np.asarray(loss_v(state), dtype=np.float64))
+        times.append(float("nan"))
+        for _ in range(base.epochs - 1):
+            t0 = time.perf_counter()
+            state = epoch_v(state, steps)
+            jax.block_until_ready(state)
+            times.append(time.perf_counter() - t0)
+            losses.append(np.asarray(loss_v(state), dtype=np.float64))
+        times[0] = float(np.nanmedian(times[1:])) if len(times) > 1 else 0.0
+
+        loss_mat = np.stack(losses, axis=1)              # [S, epochs+1]
+        per_trial_times = np.asarray(times) / S          # amortized
+        return [
+            TrialResult(losses=loss_mat[i],
+                        epoch_times=per_trial_times.copy(),
+                        strategy=t.strategy.name, task=t.task, stacked=True)
+            for i, t in enumerate(group)
+        ]

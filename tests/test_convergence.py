@@ -1,0 +1,130 @@
+"""Convergence methodology (§6.1): thresholds, step grid, run metrics."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import convergence, sgd
+
+
+# ---------------------------------------------------------------------------
+# thresholds
+# ---------------------------------------------------------------------------
+
+
+def test_thresholds_positive_optimum():
+    th = convergence.thresholds(10.0)
+    assert th[0.10] == pytest.approx(11.0)
+    assert th[0.01] == pytest.approx(10.1)
+    # looser tolerance => easier (larger) target
+    assert th[0.10] > th[0.05] > th[0.02] > th[0.01] > 10.0
+
+
+def test_thresholds_negative_optimum():
+    """'Within t of the optimum' must stay above a *negative* optimum."""
+    th = convergence.thresholds(-2.0)
+    assert th[0.10] == pytest.approx(-1.8)
+    assert th[0.01] == pytest.approx(-1.98)
+    for t, target in th.items():
+        assert target > -2.0  # reachable: above the optimum
+    assert th[0.10] > th[0.01]  # looser tolerance is still easier
+
+
+def test_thresholds_zero_optimum():
+    th = convergence.thresholds(0.0)
+    assert all(v == 0.0 for v in th.values())
+
+
+def test_thresholds_custom_tolerances():
+    th = convergence.thresholds(4.0, (0.5,))
+    assert th == {0.5: pytest.approx(6.0)}
+
+
+# ---------------------------------------------------------------------------
+# grid_step_sizes
+# ---------------------------------------------------------------------------
+
+
+def test_grid_step_sizes_default_bounds():
+    grid = convergence.grid_step_sizes()
+    assert grid[0] == pytest.approx(1e-6)
+    assert grid[-1] == pytest.approx(1e2)
+    assert len(grid) == 9  # one per decade, inclusive
+    assert grid == sorted(grid)
+    ratios = [b / a for a, b in zip(grid, grid[1:])]
+    assert all(r == pytest.approx(10.0) for r in ratios)
+
+
+def test_grid_step_sizes_custom_bounds():
+    grid = convergence.grid_step_sizes(-2, 0)
+    assert grid == pytest.approx([1e-2, 1e-1, 1.0])
+    assert convergence.grid_step_sizes(0, 0) == pytest.approx([1.0])
+
+
+# ---------------------------------------------------------------------------
+# RunResult.epochs_to / time_to
+# ---------------------------------------------------------------------------
+
+
+def _result(losses, times):
+    return sgd.RunResult(losses=np.asarray(losses, dtype=float),
+                         epoch_times=np.asarray(times, dtype=float),
+                         strategy="s", task="lr")
+
+
+def test_epochs_and_time_to_monotone_curve():
+    res = _result([1.0, 0.8, 0.6, 0.4], [0.1, 0.2, 0.3])
+    assert res.epochs_to(0.6) == 2
+    assert res.time_to(0.6) == pytest.approx(0.3)   # 0.1 + 0.2
+    assert res.epochs_to(1.0) == 0 and res.time_to(1.0) == 0.0
+    assert res.epochs_to(0.39) is None and res.time_to(0.39) is None
+
+
+def test_epochs_to_oscillating_curve_takes_first_crossing():
+    """An oscillating curve counts the *first* epoch at/below target, even
+    if the loss later bounces back above it."""
+    res = _result([1.0, 0.5, 0.9, 0.45, 0.7], [0.1, 0.1, 0.1, 0.1])
+    assert res.epochs_to(0.5) == 1       # not 3: first crossing wins
+    assert res.epochs_to(0.45) == 3      # reached only on the second dip
+    assert res.time_to(0.45) == pytest.approx(0.3)
+    assert res.epochs_to(0.2) is None
+
+
+def test_time_per_epoch_is_mean():
+    res = _result([1.0, 0.9], [0.2, 0.4])
+    assert res.time_per_epoch == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# rank_key (the §6.1 selection order)
+# ---------------------------------------------------------------------------
+
+
+def test_rank_key_orders_converged_before_stuck_before_diverged():
+    fast = _result([1.0, 0.1], [0.1])
+    slow = _result([1.0, 0.5, 0.1], [0.1, 0.5])
+    stuck = _result([1.0, 0.9], [0.1])
+    diverged = _result([1.0, float("nan")], [0.1])
+    keys = [convergence.rank_key(r, target=0.2)
+            for r in (fast, slow, stuck, diverged)]
+    assert keys == sorted(keys)
+    assert keys[-1] == (2, math.inf)
+
+
+def test_rank_key_epochs_mode_ignores_wall_time():
+    """by="epochs" ranks on statistical efficiency only — a slower-clock
+    run with fewer epochs-to-target wins (deterministic advisor mode)."""
+    few_slow = _result([1.0, 0.1], [10.0])
+    many_fast = _result([1.0, 0.5, 0.1], [0.01, 0.01])
+    by_time = sorted([many_fast, few_slow],
+                     key=lambda r: convergence.rank_key(r, 0.2, by="time"))
+    by_epochs = sorted([many_fast, few_slow],
+                       key=lambda r: convergence.rank_key(r, 0.2, by="epochs"))
+    assert by_time[0] is many_fast
+    assert by_epochs[0] is few_slow
+
+
+def test_optimal_loss_ignores_non_finite():
+    a = _result([1.0, 0.5], [0.1])
+    b = _result([1.0, float("inf"), float("nan")], [0.1, 0.1])
+    assert convergence.optimal_loss([a, b]) == pytest.approx(0.5)

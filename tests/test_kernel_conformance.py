@@ -6,6 +6,8 @@ on every backend available on this host (CPU CI: ``pallas-interpret`` and
 losses and both dense and sparse data.  Future kernel PRs must keep this
 suite green — it is the executable contract of DESIGN.md §3.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -232,3 +234,77 @@ def test_glm_grad_backends_agree_pairwise(task, glm_data):
             for b in common.available_backends("glm_grad")]
     for other in outs[1:]:
         np.testing.assert_allclose(outs[0], other, rtol=1e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: AsyncLocalSGD.kernel_backend routes replica epochs through
+# the registry (dense -> glm_sgd vmapped over replicas, sparse -> glm_sparse)
+# and reproduces the pure-XLA engine path on every available backend.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", common.available_backends("glm_sgd"))
+@pytest.mark.parametrize("local_batch", [1, 4])
+def test_async_engine_kernel_backend_dense(backend, local_batch, glm_data):
+    from repro.core import glm, sgd
+
+    X, y, _ = glm_data(64, 16)
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    strat = sgd.AsyncLocalSGD(replicas=4, local_batch=local_batch)
+    base = sgd.run(prob, strat, 3, record_time=False)
+    routed = sgd.run(
+        prob, dataclasses.replace(strat, kernel_backend=backend), 3,
+        record_time=False)
+    np.testing.assert_allclose(routed.losses, base.losses,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_async_engine_kernel_backend_dense_rejects_ragged_partition(glm_data):
+    """local_batch must divide the partition size (n//R + rep_k)."""
+    from repro.core import glm, sgd
+
+    X, y, _ = glm_data(64, 16)
+    prob = glm.GLMProblem("lr", X, y, 5e-3)
+    strat = sgd.AsyncLocalSGD(replicas=4, local_batch=5,
+                              kernel_backend=common.REFERENCE)
+    with pytest.raises(ValueError, match="divide the"):
+        sgd.make_epoch_fn(prob, strat)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    common.available_backends("glm_sparse", info={"sparse": True, "n": 64,
+                                                  "d": 128}))
+def test_async_engine_kernel_backend_sparse(backend):
+    """Sparse replica epochs route through glm_sparse when the local update
+    is full-partition (glm_sparse is a sum-gradient kernel); any other
+    granularity must refuse rather than silently fall back."""
+    import jax.numpy as jnp
+
+    from repro.core import sgd
+    from repro.data import synthetic
+
+    sp = synthetic.make_sparse("sp-async", 64, 128, 5.0, 8, seed=4)
+    per = 64 // 4
+    prob = ("lr", sp.ell, jnp.asarray(sp.y), 0.05)
+    base = sgd.run(prob, sgd.AsyncLocalSGD(replicas=4, local_batch=per), 3,
+                   sparse_data=True, record_time=False)
+    routed = sgd.run(
+        prob, sgd.AsyncLocalSGD(replicas=4, local_batch=per,
+                                kernel_backend=backend), 3,
+        sparse_data=True, record_time=False)
+    np.testing.assert_allclose(routed.losses, base.losses,
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="full-partition"):
+        sgd.make_epoch_fn(
+            prob, sgd.AsyncLocalSGD(replicas=4, local_batch=1,
+                                    kernel_backend=backend),
+            sparse_data=True)
+
+
+def test_async_strategy_name_includes_backend():
+    from repro.core import sgd
+
+    plain = sgd.AsyncLocalSGD(replicas=4)
+    routed = sgd.AsyncLocalSGD(replicas=4, kernel_backend=common.REFERENCE)
+    assert plain.name + f"[{common.REFERENCE}]" == routed.name
