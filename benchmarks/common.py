@@ -11,8 +11,13 @@ axis is reproduced as *execution paths* of the same math (see DESIGN.md §2):
     async-rN   async-local SGD with N model replicas (paper: Hogwild; N maps
                the kernel/block/thread replication axis)
 
-Datasets are synthetic stand-ins matching Table 3 statistics, scaled by
---profile (ci: tiny / paper: larger) for single-core wall-clock sanity.
+Datasets default to synthetic stand-ins matching Table 3 statistics,
+scaled by --profile (ci: tiny / paper: larger) for single-core
+wall-clock sanity.  ``--real`` (benchmarks.run) flips the module-level
+``SOURCE`` to "real": every sweep then loads the paper's measured
+datasets through ``repro.data.ingest`` — bundled miniature fixtures
+offline, cached full downloads when ``REPRO_ALLOW_DOWNLOAD=1`` fetched
+them — and every trial-cache key embeds the ingested content hash.
 
 Sweep execution goes through ``repro.study``: every (dataset, task,
 strategy, step) cell is a ``TrialSpec`` executed by the module-level
@@ -32,23 +37,47 @@ from repro.study import tuner as tuner_mod
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "bench_results"
 
-# profile -> (dataset max_n, epochs, datasets)
+# profile -> (dataset max_n, epochs, synthetic + real dataset name tuples)
 PROFILES = {
     "ci": dict(max_n=2048, epochs=12,
-               datasets=("covtype", "w8a", "real-sim")),
+               datasets=("covtype", "w8a", "real-sim"),
+               real_datasets=("covtype", "w8a", "real-sim")),
     "paper": dict(max_n=16384, epochs=30,
-                  datasets=("covtype", "w8a", "real-sim", "rcv1", "news")),
+                  datasets=("covtype", "w8a", "real-sim", "rcv1", "news"),
+                  real_datasets=("covtype", "w8a", "real-sim", "news",
+                                 "skin")),
 }
 
 TASKS = ("lr", "svm")
+
+#: dataset source for every sweep: "synthetic" | "real" (set by --real)
+SOURCE = "synthetic"
 
 #: shared trial runner: one dataset memo + trial cache for the whole sweep;
 #: the driver (benchmarks.run) attaches a StudyStore to record every trial
 RUNNER = runner_mod.Runner(cache_dir=RESULTS_DIR / "study_cache")
 
 
+def set_source(source: str) -> None:
+    """Switch every benchmark module between synthetic and real data."""
+    global SOURCE
+    assert source in ("synthetic", "real"), source
+    SOURCE = source
+
+
+def profile_datasets(profile: str) -> tuple[str, ...]:
+    """The dataset names a sweep iterates, source-aware.
+
+    The paper profile's real list swaps rcv1 (no bundled fixture) for
+    skin — the five datasets the paper actually measures.
+    """
+    p = PROFILES[profile]
+    return p["real_datasets"] if SOURCE == "real" else p["datasets"]
+
+
 def dataset_spec(name: str, profile: str) -> spec_mod.DatasetSpec:
-    return spec_mod.DatasetSpec(name, max_n=PROFILES[profile]["max_n"])
+    return spec_mod.DatasetSpec(name, max_n=PROFILES[profile]["max_n"],
+                                source=SOURCE)
 
 
 def load(name: str, profile: str):

@@ -16,7 +16,7 @@ LEVELS = {"kernel": 1, "block": 8, "thread": 64}
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
-    for name in p["datasets"][:2]:
+    for name in common.profile_datasets(profile)[:2]:
         dspec = common.dataset_spec(name, profile)
         n = dspec.profile().n
         for task in ("lr",):

@@ -14,7 +14,7 @@ from repro.core import sgd
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
-    for name in p["datasets"]:
+    for name in common.profile_datasets(profile):
         dspec = common.dataset_spec(name, profile)
         for task in common.TASKS:
             _, sync_res, _ = common.tune(

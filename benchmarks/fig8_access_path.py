@@ -18,7 +18,7 @@ from repro.core import sgd
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
-    for name in p["datasets"][:2]:
+    for name in common.profile_datasets(profile)[:2]:
         dspec = common.dataset_spec(name, profile)
         for task in ("lr",):
             per = {}

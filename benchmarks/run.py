@@ -1,7 +1,13 @@
 """Benchmark driver: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--profile ci|paper]
-        [--only mod1,mod2] [--out-json BENCH_study.json]
+        [--only mod1,mod2] [--real] [--out-json BENCH_study.json]
+
+``--only`` accepts unambiguous prefixes (``--only table4`` runs
+``table4_sync``).  ``--real`` sweeps the paper's measured datasets via
+repro.data.ingest instead of the synthetic Table-3 stand-ins; offline
+it resolves the bundled fixtures, and trial-cache keys carry the
+ingested content hash either way.
 
 Emits CSVs into bench_results/ and prints a summary, then validates the
 paper's qualitative claims (repro.study.claims) against the measured
@@ -38,21 +44,44 @@ MODULES = {
 }
 
 
+def _resolve_module(name: str) -> str | list[str]:
+    """Exact module name, or an unambiguous prefix of one.
+
+    Returns the resolved name, or the (possibly empty) list of
+    colliding candidates so the caller can report ambiguity vs unknown.
+    """
+    if name in MODULES:
+        return name
+    hits = [m for m in MODULES if m.startswith(name)]
+    return hits[0] if len(hits) == 1 else hits
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="ci", choices=list(common.PROFILES))
     ap.add_argument("--only", default=None,
-                    help="comma-separated module names (default: all)")
+                    help="comma-separated module names or unambiguous "
+                         "prefixes (default: all)")
+    ap.add_argument("--real", action="store_true",
+                    help="sweep real datasets (repro.data.ingest) instead "
+                         "of the synthetic Table-3 stand-ins")
     ap.add_argument("--out-json", default="BENCH_study.json",
                     help="structured results path (repro.study.store)")
     args = ap.parse_args(argv)
 
+    if args.real:
+        common.set_source("real")
+
     selected = list(MODULES)
     if args.only:
-        selected = [s.strip() for s in args.only.split(",") if s.strip()]
-        unknown = [s for s in selected if s not in MODULES]
-        if unknown:
-            ap.error(f"unknown modules {unknown}; known: {list(MODULES)}")
+        asked = [s.strip() for s in args.only.split(",") if s.strip()]
+        resolved = {s: _resolve_module(s) for s in asked}
+        for s, m in resolved.items():
+            if isinstance(m, list):
+                if m:
+                    ap.error(f"ambiguous module prefix {s!r}: matches {m}")
+                ap.error(f"unknown module {s!r}; known: {list(MODULES)}")
+        selected = [resolved[s] for s in asked]
 
     store = StudyStore(args.out_json,
                        jsonl_path=common.RESULTS_DIR / "study_runs.jsonl")

@@ -54,7 +54,7 @@ def _sync_paths(ds, task, step):
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
-    for name in p["datasets"]:
+    for name in common.profile_datasets(profile):
         dspec = common.dataset_spec(name, profile)
         ds = common.load(name, profile)
         for task in common.TASKS:
@@ -64,7 +64,7 @@ def run(profile: str = "ci"):
                 dspec, task, strategy, p["epochs"])
             iters = res.epochs_to(target)
             rows.append(dict(
-                dataset=name, task=task,
+                dataset=name, task=task, n=ds.n,
                 t_iter_sync_ms=1e3 * t["sync"],
                 t_iter_comp_ms=1e3 * t["sync-comp"],
                 t_iter_seq_ms=1e3 * t["seq"],

@@ -18,7 +18,7 @@ def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     caps = advisor.HostCaps.detect()
     rows = []
-    for name in p["datasets"]:
+    for name in common.profile_datasets(profile):
         dspec = common.dataset_spec(name, profile)
         for task in common.TASKS:
             rec = advisor.recommend(

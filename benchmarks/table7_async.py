@@ -25,7 +25,7 @@ CONFIGS = {
 def run(profile: str = "ci"):
     p = common.PROFILES[profile]
     rows = []
-    for name in p["datasets"]:
+    for name in common.profile_datasets(profile):
         dspec = common.dataset_spec(name, profile)
         n = dspec.profile().n
         for task in common.TASKS:

@@ -41,6 +41,95 @@ class ELLMatrix(NamedTuple):
         return self.values.shape[1]
 
 
+class CSRMatrix(NamedTuple):
+    """Host-side CSR triple — the ingestion-facing sparse layout.
+
+    This is the representation parsers produce (variable-length rows,
+    no padding); ``to_ell`` converts to the TPU-native padded layout.
+    All arrays are numpy: CSR never reaches a kernel directly.
+    """
+
+    indptr: np.ndarray   # [N+1] int64 row offsets
+    indices: np.ndarray  # [nnz] int32 column ids
+    values: np.ndarray   # [nnz] float32
+    d: int               # number of features (model dimension)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (len(self.indptr) - 1, self.d)
+
+    @property
+    def n(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def avg_nnz(self) -> float:
+        return float(self.nnz / max(self.n, 1))
+
+    def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[i]), int(self.indptr[i + 1])
+        return self.indices[lo:hi], self.values[lo:hi]
+
+    def select(self, rows: np.ndarray) -> "CSRMatrix":
+        """Row subset (host-side, vectorized — used by train/test splits)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        counts = self.row_nnz[rows]
+        indptr = np.zeros(len(rows) + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        # absolute source index = row start + offset within the row
+        within = np.arange(int(indptr[-1]), dtype=np.int64) \
+            - np.repeat(indptr[:-1], counts)
+        take = np.repeat(self.indptr[rows], counts) + within
+        return CSRMatrix(indptr, self.indices[take], self.values[take], self.d)
+
+    def to_ell(self, pad_to: int | None = None) -> ELLMatrix:
+        """Zero-padded ELL conversion, vectorized (the paper's padded-width
+        format, §5.2.1: every row stored at the same width).  ``pad_to``
+        defaults to the maximum row width so no entry is dropped; an
+        explicit narrower ``pad_to`` truncates overflow rows."""
+        N = self.n
+        K = int(self.row_nnz.max()) if (pad_to is None and N) else (pad_to or 1)
+        K = max(K, 1)
+        values = np.zeros((N, K), dtype=np.float32)
+        indices = np.zeros((N, K), dtype=np.int32)
+        if self.nnz:
+            row_of = np.repeat(np.arange(N, dtype=np.int64), self.row_nnz)
+            pos = np.arange(self.nnz, dtype=np.int64) \
+                - np.repeat(self.indptr[:-1], self.row_nnz)
+            keep = pos < K
+            values[row_of[keep], pos[keep]] = self.values[keep]
+            indices[row_of[keep], pos[keep]] = self.indices[keep]
+        return ELLMatrix(jnp.asarray(values), jnp.asarray(indices), self.d)
+
+    def to_dense(self) -> np.ndarray:
+        """Densify host-side (dense datasets and tests — O(N*d))."""
+        out = np.zeros((self.n, self.d), dtype=np.float32)
+        rows = np.repeat(np.arange(self.n), self.row_nnz)
+        np.add.at(out, (rows, self.indices), self.values)
+        return out
+
+
+def from_csr_parts(
+    rows_idx: list[np.ndarray], rows_val: list[np.ndarray], d: int
+) -> CSRMatrix:
+    """Assemble a ``CSRMatrix`` from per-row (indices, values) pairs."""
+    indptr = np.zeros(len(rows_idx) + 1, dtype=np.int64)
+    np.cumsum([len(r) for r in rows_idx], out=indptr[1:])
+    indices = (np.concatenate(rows_idx).astype(np.int32)
+               if rows_idx else np.zeros(0, dtype=np.int32))
+    values = (np.concatenate(rows_val).astype(np.float32)
+              if rows_val else np.zeros(0, dtype=np.float32))
+    return CSRMatrix(indptr, indices, values, d)
+
+
 def from_dense(X: np.ndarray, pad_to: int | None = None) -> ELLMatrix:
     """Build an ELLMatrix from a dense [N, d] array (host-side, numpy)."""
     N, d = X.shape

@@ -22,6 +22,7 @@ PAPER_DATASETS: dict[str, tuple[int, int, float, int, bool]] = {
     "real-sim": (72_309, 20_958, 51.30, 3_484, False),
     "rcv1": (677_399, 47_236, 73.16, 1_224, False),
     "news": (19_996, 1_355_191, 454.99, 16_423, False),
+    "skin": (245_057, 3, 3.0, 3, True),
 }
 
 
@@ -33,6 +34,7 @@ class Dataset:
     y: np.ndarray                   # [N] in {-1, +1}
     d: int
     dense: bool
+    content_hash: str | None = None  # real data only (repro.data.ingest)
 
     @property
     def n(self) -> int:

@@ -1,10 +1,48 @@
 """Study harness: the paper's experimental methodology as a subsystem.
 
-Dataflow (DESIGN.md §4):
+The paper's core contribution is a *methodology* — sweep update
+strategy × replication × access path per dataset, measure hardware
+efficiency, statistical efficiency, and time-to-convergence, and pick
+the optimal configuration per dataset/hardware (§6, Tables 4-7).  The
+modules here make that loop a first-class, cacheable API.
+
+Dataflow (DESIGN.md §4; ingestion feeding it is §5):
 
     spec.TrialSpec grid ──▶ tuner.tune_step ──▶ runner.Runner ──▶ store
                                                      │
     advisor.recommend ◀── ranked Table-6 answer ◀────┘
                                          claims.validate ──▶ verdicts
+
+Modules
+-------
+spec     frozen, content-hashed trial descriptions (``DatasetSpec`` —
+         synthetic stand-in, explicit dense shape, or real data via
+         ``source="real"`` — × task × strategy × step × epochs)
+runner   cache-first execution with vmap step-stacking
+tuner    the §6.1 step-size grid search as a reusable autotuner
+store    deterministic ``BENCH_study.json`` + append-only run JSONL
+advisor  the paper's Table 6 as a queryable API (``recommend``)
+claims   paper-claim predicates validated against sweep rows
+
+Quickstart
+----------
+Run one cached sweep cell and ask the advisor the Table-6 question::
+
+    from repro.core import sgd
+    from repro.study import advisor, spec
+    from repro.study.runner import Runner
+
+    runner = Runner(cache_dir="bench_results/study_cache")
+    trial = spec.TrialSpec(
+        dataset=spec.DatasetSpec("w8a", source="real"),  # bundled fixture
+        task="lr", strategy=sgd.SyncSGD(), step=1e-2, epochs=8)
+    result = runner.run_trial(trial)        # cached under trial.key
+    print(result.final_loss, result.time_per_epoch)
+
+    rec = advisor.recommend("covtype", task="svm", runner=runner)
+    print(rec.best.name, rec.best.score)
+
+``python -m benchmarks.run`` drives the full table/figure sweeps on
+top of this package (``--real`` switches to ingested real datasets).
 """
 from repro.study import advisor, claims, runner, spec, store, tuner  # noqa: F401

@@ -18,6 +18,22 @@ so the ranking is reproducible under a fixed seed.  ``rank="measured"``
 substitutes measured wall time per epoch (the paper's actual Table-6
 protocol; benchmarks use it, tests use the default).  The measured
 evidence is attached to every ranked row either way.
+
+Usage — "what should I run on this dataset, on this host?"::
+
+    from repro.study import advisor
+
+    rec = advisor.recommend("w8a", task="lr")        # synthetic stand-in
+    print(rec.best.name, rec.best.best_step)          # e.g. async-r16-b1
+    for row in rec.ranked:                            # full Table-6 row set
+        print(row.name, row.score, row.stat_penalty, row.hw_advantage)
+
+Pass a ``DatasetSpec(..., source="real")`` to rank against an ingested
+real dataset, a ``Runner(cache_dir=...)`` to reuse the study trial
+cache across calls, and ``caps=HostCaps.detect()`` (the default) to
+filter candidates by what this host can execute.  ``benchmarks/
+table6_optimal.py`` is a thin wrapper over this module with
+``rank="measured"``.
 """
 from __future__ import annotations
 

@@ -5,18 +5,47 @@ returns human-readable violation strings (empty = claim holds);
 ``validate`` dispatches a full results dict.  Living here instead of the
 benchmark driver lets tests assert the predicates directly on synthetic
 rows, and lets the store persist verdicts next to the trial data.
+
+Usage — validate sweep rows without the benchmark driver::
+
+    from repro.study import claims
+
+    rows = [{"dataset": "w8a", "task": "lr", "n": 2048,
+             "paths_statistically_identical": True,
+             "speedup_sync_vs_seq": 41.0}]
+    assert claims.check_table4(rows) == []            # claim holds
+    assert claims.validate({"table4_sync": rows}) == []
+
+``benchmarks.run`` calls ``validate`` on every sweep and exits
+non-zero on violations; ``store.StudyStore.record_claims`` persists
+the verdicts into ``BENCH_study.json``.  Timing-based predicates carry
+size/noise floors (e.g. ``TABLE4_TIMING_N_FLOOR``) so miniature
+fixture runs only assert the statistical halves of each claim.
 """
 from __future__ import annotations
 
 
+#: below this many examples the batch-vs-sequential timing claim is
+#: meaningless (fixed launch overhead dominates sub-ms epochs — the
+#: regime real-data fixtures run in); statistical identity always holds
+TABLE4_TIMING_N_FLOOR = 1024
+
+
 def check_table4(rows: list[dict]) -> list[str]:
-    """Sync statistical identity across execution paths + batch ≥ seq."""
+    """Sync statistical identity across execution paths + batch ≥ seq.
+
+    The speedup claim is the paper's at-scale statement (§6.2, >400x on
+    full datasets); rows measured on fewer than
+    ``TABLE4_TIMING_N_FLOOR`` examples (miniature fixtures) only assert
+    the statistical-identity half.
+    """
     bad = []
     for r in rows:
         if not r["paths_statistically_identical"]:
             bad.append(f"table4: fused != composition on {r['dataset']}"
                        f"/{r['task']} (sync statistical identity broken)")
-        if r["speedup_sync_vs_seq"] < 1.0:
+        if (r.get("n", TABLE4_TIMING_N_FLOOR) >= TABLE4_TIMING_N_FLOOR
+                and r["speedup_sync_vs_seq"] < 1.0):
             bad.append(f"table4: batch path slower than sequential on "
                        f"{r['dataset']}/{r['task']}")
     return bad

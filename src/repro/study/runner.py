@@ -12,8 +12,13 @@ The runner turns ``TrialSpec``s into ``TrialResult``s:
   ``step_param=True`` and vmapped over a stacked ``[S, ...]`` state +
   ``[S]`` step vector.  Wall time is measured for the stack and
   amortized per trial (flagged ``stacked`` in the result meta);
-* **dataset memoization** — synthetic datasets are generated once per
-  ``DatasetSpec`` per runner.
+* **dataset memoization** — datasets (synthetic generations and real
+  ingests alike) are materialized once per ``DatasetSpec`` per runner.
+
+Cache keys come from ``TrialSpec.key``; for ``source="real"`` specs
+that hash embeds the ingested matrix's content hash
+(``repro.data.ingest.content_hash``), so cached trials are invalidated
+when the underlying bytes change, not just when the spec does.
 """
 from __future__ import annotations
 

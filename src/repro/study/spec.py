@@ -6,9 +6,12 @@ per cell and every cell scored on the three performance axes.  This
 module declares that sweep as hashable frozen dataclasses so the runner
 can cache, stack, and resume it:
 
-* ``DatasetSpec``   a reproducible synthetic dataset (Table-3 profile +
-                    size cap + seed, or an explicit (n, d) dense shape
-                    for scaling studies);
+* ``DatasetSpec``   a reproducible dataset: a synthetic Table-3
+                    stand-in (profile + size cap + seed), an explicit
+                    (n, d) dense shape for scaling studies, or one of
+                    the paper's real datasets via ``source="real"``
+                    (ingested by ``repro.data.ingest``; its trial keys
+                    embed the ingested content hash);
 * ``DatasetProfile``the advisor-facing summary (n, d, nnz/example,
                     density) — derivable without materializing the data;
 * ``TrialSpec``     one (dataset, task, strategy, step, epochs) cell with
@@ -56,11 +59,15 @@ class DatasetProfile:
 
 @dataclasses.dataclass(frozen=True)
 class DatasetSpec:
-    """A reproducible dataset instance.
+    """A reproducible dataset instance, synthetic or real.
 
     Table-3 stand-ins: ``DatasetSpec("covtype", max_n=2048)``.  Scaling
     studies (fig24-style) pin an explicit dense shape instead:
-    ``DatasetSpec("dense-d", n=1024, d=512)``.
+    ``DatasetSpec("dense-d", n=1024, d=512)``.  The paper's measured
+    datasets load through :mod:`repro.data.ingest` with
+    ``source="real"`` (bundled fixture offline, cached full download
+    when present); ``split`` then selects the §6.1 train/test partition
+    (default ``"train"``).
     """
 
     name: str
@@ -68,8 +75,24 @@ class DatasetSpec:
     seed: int = 0
     n: int | None = None     # explicit dense shape (overrides the profile)
     d: int | None = None
+    source: str = "synthetic"       # "synthetic" | "real"
+    split: str | None = None        # real only: "train" | "test" | "all"
 
     def __post_init__(self):
+        if self.source not in ("synthetic", "real"):
+            raise ValueError(f"source must be synthetic|real: {self.source!r}")
+        if self.source == "real":
+            from repro.data import ingest
+            if self.n is not None or self.d is not None:
+                raise ValueError("real datasets get their shape from the "
+                                 "data; drop the explicit (n, d)")
+            ingest.registry.get(self.name)   # raises on unknown names
+            if self.split is not None and self.split not in ingest.SPLITS:
+                raise ValueError(
+                    f"split must be one of {ingest.SPLITS}: {self.split!r}")
+            return
+        if self.split is not None:
+            raise ValueError("split only applies to source='real'")
         if (self.n is None) != (self.d is None):
             raise ValueError("explicit shapes need both n and d")
         if self.n is None and self.name not in synthetic.PAPER_DATASETS:
@@ -77,7 +100,14 @@ class DatasetSpec:
                 f"unknown dataset {self.name!r}; Table-3 names: "
                 f"{tuple(synthetic.PAPER_DATASETS)} (or pass explicit n, d)")
 
+    def _ingest_kwargs(self) -> dict:
+        return {"split": self.split or "train", "max_n": self.max_n,
+                "seed": self.seed}
+
     def load(self) -> synthetic.Dataset:
+        if self.source == "real":
+            from repro.data import ingest
+            return ingest.load(self.name, **self._ingest_kwargs())
         if self.n is not None:
             return synthetic.make_dense(self.name, self.n, self.d,
                                         seed=self.seed)
@@ -85,6 +115,12 @@ class DatasetSpec:
                                        seed=self.seed)
 
     def profile(self) -> DatasetProfile:
+        if self.source == "real":
+            # derived from the parsed data, not the Table-3 stand-in row
+            from repro.data import ingest
+            n, d, avg_nnz, dense = ingest.profile(self.name,
+                                                  **self._ingest_kwargs())
+            return DatasetProfile(self.name, n, d, avg_nnz, dense)
         if self.n is not None:
             return DatasetProfile(self.name, self.n, self.d, float(self.d),
                                   dense=True)
@@ -95,7 +131,24 @@ class DatasetSpec:
                               float(d) if dense else avg_nnz, dense)
 
     def to_dict(self) -> dict:
-        return _prune_none(dataclasses.asdict(self))
+        dct = _prune_none(dataclasses.asdict(self))
+        if dct.get("source") == "synthetic":   # default: keep keys stable
+            del dct["source"]
+        return dct
+
+    def cache_key_dict(self) -> dict:
+        """``to_dict`` plus, for real data, the ingested content hash.
+
+        Trial-cache keys build on this instead of ``to_dict`` so a
+        changed source file (re-fetched dataset, edited fixture)
+        invalidates every cached trial computed from the old bytes.
+        """
+        dct = self.to_dict()
+        if self.source == "real":
+            from repro.data import ingest
+            dct["content_hash"] = ingest.content_hash(
+                self.name, **self._ingest_kwargs())
+        return dct
 
     @classmethod
     def from_dict(cls, dct: dict) -> "DatasetSpec":
@@ -159,15 +212,25 @@ class TrialSpec:
             seed=dct.get("seed", 0),
         )
 
+    def _key_dict(self) -> dict:
+        dct = self.to_dict()
+        dct["dataset"] = self.dataset.cache_key_dict()
+        return dct
+
     @property
     def key(self) -> str:
-        """Content-hash cache key: same spec ⇒ same key across processes."""
-        return _digest({"schema": SCHEMA_VERSION, **self.to_dict()})
+        """Content-hash cache key: same spec ⇒ same key across processes.
+
+        For real datasets the key embeds the ingested matrix's content
+        hash, so trials cached against stale bytes never serve a sweep
+        over re-fetched data.
+        """
+        return _digest({"schema": SCHEMA_VERSION, **self._key_dict()})
 
     @property
     def stack_key(self) -> str:
         """Trials equal here except for ``step`` can run vmap-stacked."""
-        dct = self.to_dict()
+        dct = self._key_dict()
         dct.pop("step")
         return _digest({"schema": SCHEMA_VERSION, **dct})
 

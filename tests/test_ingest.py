@@ -1,0 +1,332 @@
+"""Real-dataset ingestion: parser edge cases, cache integrity, registry
+fidelity against Table 3, and the DatasetSpec(source="real") wiring.
+
+The acceptance contract (ISSUE 3): every paper dataset name resolves
+offline from the bundled fixtures into a CSR/ELL matrix whose profile
+(n, d, density, task) matches Table 3, and real trials are cache-keyed
+by the ingested content hash.
+"""
+import bz2
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import sgd
+from repro.core import sparse as sparse_mod
+from repro.data import ingest
+from repro.data.ingest import cache, libsvm, registry
+from repro.study import spec
+from repro.study.runner import Runner
+
+# Table 3 of the paper, asserted literally (n, d, avg_nnz, dense, task)
+TABLE3 = {
+    "covtype": (581_012, 54, 54.0, True, "binary"),
+    "w8a": (64_700, 300, 11.65, False, "binary"),
+    "real-sim": (72_309, 20_958, 51.30, False, "binary"),
+    "news": (19_996, 1_355_191, 454.99, False, "binary"),
+    "skin": (245_057, 3, 3.0, True, "binary"),
+}
+
+
+@pytest.fixture
+def isolated_env(tmp_path, monkeypatch):
+    """Point the blob cache at a tmp dir and clear in-process memos."""
+    monkeypatch.setenv("REPRO_DATA_DIR", str(tmp_path / "data"))
+    monkeypatch.delenv("REPRO_ALLOW_DOWNLOAD", raising=False)
+    ingest.clear_cache()
+    yield tmp_path
+    ingest.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# libsvm parser edge cases
+# ---------------------------------------------------------------------------
+
+
+def _parse(text, **kw):
+    return libsvm.parse_lines(io.StringIO(text).readlines(), **kw)
+
+
+def test_parser_skips_blank_lines_comments_and_trailing_whitespace():
+    csr, y = _parse(
+        "\n"
+        "# full-line comment\n"
+        "+1 1:0.5 3:1.5   \t \n"           # trailing whitespace
+        "   \n"
+        "-1 2:2.0  # trailing comment\n")
+    assert csr.n == 2 and y.tolist() == [1.0, -1.0]
+    np.testing.assert_allclose(csr.to_dense(),
+                               [[0.5, 0.0, 1.5], [0.0, 2.0, 0.0]])
+
+
+def test_parser_one_based_by_default_zero_based_detected():
+    one, _ = _parse("1 1:1.0 2:2.0\n")
+    assert one.d == 2 and one.to_dense().tolist() == [[1.0, 2.0]]
+    zero, _ = _parse("1 0:1.0 2:2.0\n1 1:5.0\n")   # a 0 index anywhere
+    assert zero.d == 3
+    np.testing.assert_allclose(zero.to_dense(),
+                               [[1.0, 0.0, 2.0], [0.0, 5.0, 0.0]])
+    forced, _ = _parse("1 1:1.0 2:2.0\n", zero_based=True)
+    assert forced.d == 3  # same tokens, forced reading
+    with pytest.raises(libsvm.LibsvmFormatError, match="forced to 1-based"):
+        _parse("1 0:5.0 1:7.0\n", zero_based=False)   # 0 can't shift down
+
+
+def test_parser_label_only_rows_are_zero_examples():
+    csr, y = _parse("1 1:1.0\n-1\n1 2:3.0\n", d=2)
+    assert csr.n == 3
+    assert csr.row_nnz.tolist() == [1, 0, 1]
+    np.testing.assert_allclose(csr.to_dense()[1], [0.0, 0.0])
+    assert y.tolist() == [1.0, -1.0, 1.0]
+
+
+def test_parser_sums_duplicate_feature_ids():
+    csr, _ = _parse("1 3:1.0 1:2.0 3:0.25\n")
+    np.testing.assert_allclose(csr.to_dense(), [[2.0, 0.0, 1.25]])
+    assert csr.row_nnz.tolist() == [2]          # merged, not repeated
+
+
+def test_parser_ignores_qid_and_rejects_garbage():
+    csr, _ = _parse("1 qid:7 1:1.0\n")
+    assert csr.nnz == 1
+    with pytest.raises(libsvm.LibsvmFormatError, match="bad label"):
+        _parse("spam 1:1.0\n")
+    with pytest.raises(libsvm.LibsvmFormatError, match="bad feature"):
+        _parse("1 1:one\n")
+    with pytest.raises(libsvm.LibsvmFormatError, match="out of range"):
+        _parse("1 5:1.0\n", d=2)
+
+
+def test_parser_streams_bz2(tmp_path):
+    path = tmp_path / "mini.bz2"
+    with bz2.open(path, "wt") as f:
+        f.write("1 1:0.5\n-1 2:0.5\n")
+    csr, y = libsvm.parse_file(path)
+    assert csr.n == 2 and y.tolist() == [1.0, -1.0]
+
+
+def test_write_libsvm_round_trips(tmp_path):
+    csr = sparse_mod.from_csr_parts(
+        [np.array([0, 4]), np.array([], dtype=np.int64), np.array([2])],
+        [np.array([1.5, -2.0]), np.array([], dtype=np.float32),
+         np.array([0.125])], d=6)
+    y = np.array([1.0, -1.0, 1.0], dtype=np.float32)
+    path = tmp_path / "rt.libsvm"
+    libsvm.write_libsvm(path, csr, y)
+    back, y2 = libsvm.parse_file(path, d=6)
+    np.testing.assert_allclose(back.to_dense(), csr.to_dense())
+    np.testing.assert_array_equal(y2, y)
+
+
+# ---------------------------------------------------------------------------
+# CSR layout helpers (core/sparse.py)
+# ---------------------------------------------------------------------------
+
+
+def test_csr_select_and_ell_conversion():
+    csr = sparse_mod.from_csr_parts(
+        [np.array([0, 1]), np.array([2]), np.array([0, 1, 2])],
+        [np.array([1.0, 2.0]), np.array([3.0]), np.array([4.0, 5.0, 6.0])],
+        d=3)
+    sub = csr.select(np.array([2, 0]))
+    np.testing.assert_allclose(sub.to_dense(),
+                               [[4.0, 5.0, 6.0], [1.0, 2.0, 0.0]])
+    ell = sub.to_ell()
+    assert ell.max_nnz == 3
+    np.testing.assert_allclose(np.asarray(sparse_mod.to_dense(ell)),
+                               sub.to_dense())
+    truncated = csr.to_ell(pad_to=1)            # explicit pad truncates
+    assert truncated.max_nnz == 1
+    np.testing.assert_allclose(np.asarray(truncated.values)[:, 0],
+                               [1.0, 3.0, 4.0])  # first entry of each row
+
+
+@pytest.mark.parametrize("name", ["w8a", "real-sim", "news"])
+def test_ingested_ell_is_lossless(name):
+    """Default ELL conversion pads to the max row width — no entry drops."""
+    ingest.clear_cache()
+    ds = ingest.load(name, split="all")
+    assert int(np.asarray(ds.ell.values != 0).sum()) == \
+        int((libsvm.parse_file(ingest.fixture_path(name),
+                               d=registry.get(name).d)[0].values != 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# cache: gating + integrity
+# ---------------------------------------------------------------------------
+
+
+def test_fetch_without_download_env_raises(isolated_env):
+    with pytest.raises(cache.DownloadDisabledError, match="REPRO_ALLOW_DOWNLOAD"):
+        cache.fetch("https://example.invalid/blob.bz2")
+
+
+def test_integrity_mismatch_raises(isolated_env):
+    blob = cache.data_dir() / "blobs" / "thing"
+    blob.parent.mkdir(parents=True)
+    blob.write_text("payload")
+    blob.with_name("thing.sha256").write_text("0" * 64 + "\n")
+    with pytest.raises(cache.IntegrityError, match="does not match"):
+        cache.verify(blob)
+
+
+def test_trust_on_first_use_records_then_enforces(isolated_env):
+    blob = cache.data_dir() / "blobs" / "thing"
+    blob.parent.mkdir(parents=True)
+    blob.write_text("payload")
+    assert cache.verify(blob) == blob           # records the sidecar
+    recorded = blob.with_name("thing.sha256").read_text().strip()
+    assert recorded == cache.sha256_file(blob)
+    blob.write_text("tampered")
+    with pytest.raises(cache.IntegrityError):
+        cache.verify(blob)
+
+
+def test_corrupt_cached_full_dataset_fails_loudly(isolated_env):
+    meta = registry.get("w8a")
+    blob, _ = cache._blob_paths(meta.url)
+    blob.parent.mkdir(parents=True)
+    blob.write_text("1 1:0.5\n")
+    blob.with_name(blob.name + ".sha256").write_text("f" * 64 + "\n")
+    with pytest.raises(cache.IntegrityError):
+        ingest.load("w8a")
+
+
+def test_full_blob_preferred_over_fixture_and_changes_hash(isolated_env):
+    fixture_hash = None
+    # resolve from fixture first (no blob cached yet)
+    ingest.clear_cache()
+    fixture_hash = ingest.content_hash("w8a")
+    # drop a verified full blob into the cache: it wins, hash changes
+    meta = registry.get("w8a")
+    blob, _ = cache._blob_paths(meta.url)
+    blob.parent.mkdir(parents=True, exist_ok=True)
+    blob.write_text("".join(f"{(-1) ** i} {1 + i % 300}:0.5\n"
+                            for i in range(10)))
+    ingest.clear_cache()
+    path, kind = ingest.source_path("w8a")
+    assert kind == "full" and path == blob
+    assert ingest.content_hash("w8a") != fixture_hash
+    ds = ingest.load("w8a")
+    assert ds.n == 8                            # 80% train split of 10
+    assert ds.d == meta.d                       # registry width pins d
+
+
+# ---------------------------------------------------------------------------
+# registry + fixtures vs Table 3
+# ---------------------------------------------------------------------------
+
+
+def test_registry_matches_table3_literals():
+    assert set(registry.REAL_DATASETS) == set(TABLE3)
+    for name, (n, d, avg_nnz, dense, task) in TABLE3.items():
+        meta = registry.get(name)
+        assert (meta.n, meta.d, meta.avg_nnz, meta.dense, meta.task) == \
+            (n, d, avg_nnz, dense, task)
+        assert meta.density == pytest.approx(avg_nnz / d)
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3))
+def test_fixture_resolves_offline_with_table3_profile(name):
+    ingest.clear_cache()
+    dspec = spec.DatasetSpec(name, source="real")
+    prof = dspec.profile()
+    ds = dspec.load()
+    _, d, avg_nnz, dense, _task = TABLE3[name]
+    assert prof.d == d and prof.dense == dense
+    assert (prof.n, prof.d, prof.dense) == (ds.n, ds.d, ds.dense)
+    # fixture density within 15% of the Table-3 row (split subsampling)
+    assert prof.avg_nnz == pytest.approx(avg_nnz, rel=0.15)
+    assert set(np.unique(ds.y)) <= {-1.0, 1.0}
+    if dense:
+        assert ds.X.shape == (ds.n, d)
+        assert np.abs(ds.X).max() <= 1.0 + 1e-6    # §6.1 max-abs scaling
+    else:
+        assert ds.ell.d == d
+        assert ds.ell.values.shape[0] == ds.n
+
+
+def test_train_test_split_disjoint_and_scaled_consistently():
+    tr = ingest.load("covtype", split="train")
+    te = ingest.load("covtype", split="test")
+    al = ingest.load("covtype", split="all")
+    assert tr.n + te.n == al.n
+    rows_tr = ingest.split_rows(al.n, "train", 0)
+    rows_te = ingest.split_rows(al.n, "test", 0)
+    assert not set(rows_tr) & set(rows_te)
+    # scaling is fit on train: train maxes out at 1, test may exceed it
+    assert np.abs(tr.X).max() <= 1.0 + 1e-6
+    np.testing.assert_array_equal(rows_tr, ingest.split_rows(al.n, "train", 0))
+
+
+# ---------------------------------------------------------------------------
+# DatasetSpec(source="real") + trial-cache keys
+# ---------------------------------------------------------------------------
+
+
+def test_real_spec_validation():
+    with pytest.raises(KeyError, match="unknown real dataset"):
+        spec.DatasetSpec("rcv1", source="real")   # no fixture bundled
+    with pytest.raises(ValueError, match="shape from the data"):
+        spec.DatasetSpec("covtype", source="real", n=8, d=8)
+    with pytest.raises(ValueError, match="split only applies"):
+        spec.DatasetSpec("covtype", split="train")
+    with pytest.raises(ValueError, match="split must be one of"):
+        spec.DatasetSpec("covtype", source="real", split="val")
+
+
+def test_real_and_synthetic_keys_differ_and_round_trip():
+    syn = spec.TrialSpec(spec.DatasetSpec("covtype", max_n=128), "lr",
+                         sgd.SyncSGD(), 1e-2, 2)
+    real = spec.TrialSpec(spec.DatasetSpec("covtype", source="real"), "lr",
+                          sgd.SyncSGD(), 1e-2, 2)
+    assert syn.key != real.key
+    assert "source" not in syn.to_dict()["dataset"]      # legacy key shape
+    assert spec.TrialSpec.from_dict(real.to_dict()) == real
+    # the persisted spec dict stays constructible (no computed fields) ...
+    assert "content_hash" not in real.to_dict()["dataset"]
+    # ... while the cache key embeds the ingested content hash
+    assert real._key_dict()["dataset"]["content_hash"] == \
+        ingest.content_hash("covtype")
+
+
+def test_trial_key_tracks_fixture_content(tmp_path, monkeypatch):
+    trial = spec.TrialSpec(spec.DatasetSpec("skin", source="real"), "lr",
+                           sgd.SyncSGD(), 1e-2, 2)
+    ingest.clear_cache()
+    key_bundled = trial.key
+    alt = tmp_path / "fixtures"
+    alt.mkdir()
+    text = ingest.fixture_path("skin").read_text()
+    (alt / "skin.libsvm").write_text(text + "1 1:128 2:4 3:99\n")
+    monkeypatch.setenv("REPRO_FIXTURE_DIR", str(alt))
+    ingest.clear_cache()
+    try:
+        assert trial.key != key_bundled         # same spec, new bytes
+    finally:
+        monkeypatch.delenv("REPRO_FIXTURE_DIR")
+        ingest.clear_cache()
+
+
+def test_runner_caches_real_trials(tmp_path):
+    ingest.clear_cache()
+    runner = Runner(cache_dir=tmp_path / "cache")
+    trial = spec.TrialSpec(spec.DatasetSpec("skin", source="real"), "lr",
+                           sgd.SyncSGD(), 1e-2, 3)
+    first = runner.run_trial(trial)
+    assert not first.cached and len(first.losses) == 4
+    again = Runner(cache_dir=tmp_path / "cache").run_trial(trial)
+    assert again.cached
+    np.testing.assert_allclose(again.losses, first.losses)
+
+
+def test_runner_runs_sparse_real_dataset_async(tmp_path):
+    ingest.clear_cache()
+    runner = Runner(cache_dir=tmp_path / "cache")
+    trial = spec.TrialSpec(
+        spec.DatasetSpec("w8a", source="real"), "svm",
+        sgd.AsyncLocalSGD(replicas=4), 1e-2, 3)
+    res = runner.run_trial(trial)
+    assert np.isfinite(res.losses).all()
+    assert res.losses[-1] <= res.losses[0]      # it actually learns

@@ -1,0 +1,120 @@
+"""Docs checker: keep README/DESIGN/docs fences executable + links live.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Three passes over every tracked ``*.md`` file:
+
+1. **intra-repo links** — every relative markdown link target must
+   exist (anchors stripped; http(s)/mailto links skipped);
+2. **fence syntax** — every ````bash`` fence must pass ``bash -n``,
+   every ````python`` fence must byte-compile;
+3. **marked fences run** — a fence immediately preceded by an
+   ``<!-- docs-ci: run -->`` comment is executed with a timeout (the
+   README quickstart, so the documented commands can never rot).
+
+Exit status is the number of failures (0 = clean).
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RUN_MARKER = "<!-- docs-ci: run -->"
+RUN_TIMEOUT_S = 300
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def md_files() -> list[Path]:
+    out = subprocess.run(
+        ["git", "ls-files", "-co", "--exclude-standard", "*.md"],
+        cwd=REPO, capture_output=True, text=True, check=True)
+    return [REPO / p for p in out.stdout.split()]
+
+
+def iter_fences(text: str):
+    """Yield (language, body, line_number, marked_run) per code fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang, start = m.group(1), i
+        body: list[str] = []
+        i += 1
+        while i < len(lines) and not lines[i].startswith("```"):
+            body.append(lines[i])
+            i += 1
+        i += 1  # closing fence
+        marked = start > 0 and lines[start - 1].strip() == RUN_MARKER
+        yield lang, "\n".join(body) + "\n", start + 1, marked
+
+
+def check_links(path: Path, text: str) -> list[str]:
+    bad = []
+    # fences often contain shell-ish [x](y)-looking text: strip them first
+    prose = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            bad.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return bad
+
+
+def check_fence(path: Path, lang: str, body: str, line: int,
+                marked: bool) -> list[str]:
+    where = f"{path.relative_to(REPO)}:{line}"
+    if lang == "bash":
+        r = subprocess.run(["bash", "-n"], input=body, capture_output=True,
+                           text=True)
+        if r.returncode:
+            return [f"{where}: bash fence fails syntax check: "
+                    f"{r.stderr.strip()}"]
+    elif lang == "python":
+        try:
+            compile(body, where, "exec")
+        except SyntaxError as e:
+            return [f"{where}: python fence fails to compile: {e}"]
+    if marked:
+        if lang != "bash":
+            return [f"{where}: only bash fences can be marked "
+                    f"'{RUN_MARKER}'"]
+        r = subprocess.run(["bash", "-euo", "pipefail", "-c", body],
+                           cwd=REPO, capture_output=True, text=True,
+                           timeout=RUN_TIMEOUT_S)
+        if r.returncode:
+            return [f"{where}: marked fence exited {r.returncode}:\n"
+                    f"{r.stdout}{r.stderr}"]
+        print(f"ran {where}:\n{r.stdout}", end="")
+    return []
+
+
+def main() -> int:
+    failures: list[str] = []
+    files = md_files()
+    n_fences = n_ran = 0
+    for path in files:
+        text = path.read_text()
+        failures += check_links(path, text)
+        for lang, body, line, marked in iter_fences(text):
+            if lang in ("bash", "python"):
+                n_fences += 1
+                n_ran += marked
+                failures += check_fence(path, lang, body, line, marked)
+    print(f"checked {len(files)} md files, {n_fences} fences "
+          f"({n_ran} executed)")
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
