@@ -24,7 +24,13 @@ strategy, step) cell is a ``TrialSpec`` executed by the module-level
 ``RUNNER`` — step grids run vmap-stacked, results land in the on-disk
 trial cache (interrupted sweeps resume; repeated sweeps are pure cache
 reads), and, when the driver attaches a ``StudyStore``, every trial is
-recorded into ``BENCH_study.json``.
+recorded into ``BENCH_study.json``.  With ``--workers N``
+(benchmarks.run) the driver also attaches a ``repro.sweep`` executor
+to the shared runner: cache-miss dispatches spanning multiple stack
+groups (the advisor's batched candidate space) execute across N
+worker subprocesses whose private caches merge back into
+``bench_results/study_cache`` — same bytes, more hosts busy — while
+single-grid dispatches stay in-process.
 """
 from __future__ import annotations
 

@@ -1,13 +1,21 @@
 """Benchmark driver: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--profile ci|paper]
-        [--only mod1,mod2] [--real] [--out-json BENCH_study.json]
+        [--only mod1,mod2] [--real] [--workers N]
+        [--out-json BENCH_study.json]
 
 ``--only`` accepts unambiguous prefixes (``--only table4`` runs
 ``table4_sync``).  ``--real`` sweeps the paper's measured datasets via
 repro.data.ingest instead of the synthetic Table-3 stand-ins; offline
 it resolves the bundled fixtures, and trial-cache keys carry the
-ingested content hash either way.
+ingested content hash either way.  ``--workers N`` dispatches
+cache-miss trials across N local worker subprocesses (repro.sweep):
+shards are stack-aware, dead workers are requeued, and the per-worker
+caches merge into the canonical trial cache — so the store output is
+byte-identical to a single-host run over the same cache.  Dispatch
+happens per runner call: batched sweeps (table6_optimal's advisor
+space) fan out across the workers, while single-grid calls run
+in-process as usual — never slower than serial (docs/SWEEPS.md).
 
 Emits CSVs into bench_results/ and prints a summary, then validates the
 paper's qualitative claims (repro.study.claims) against the measured
@@ -65,12 +73,22 @@ def main(argv=None):
     ap.add_argument("--real", action="store_true",
                     help="sweep real datasets (repro.data.ingest) instead "
                          "of the synthetic Table-3 stand-ins")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="dispatch cache-miss trials across N local worker "
+                         "subprocesses (repro.sweep; 1 = in-process)")
     ap.add_argument("--out-json", default="BENCH_study.json",
                     help="structured results path (repro.study.store)")
     args = ap.parse_args(argv)
 
+    if args.workers < 1:
+        ap.error(f"--workers must be >= 1: {args.workers}")
     if args.real:
         common.set_source("real")
+    if args.workers > 1:
+        from repro.sweep import LocalProcessExecutor
+        common.RUNNER.executor = LocalProcessExecutor(
+            workers=args.workers,
+            work_dir=common.RESULTS_DIR / "sweep_workers")
 
     selected = list(MODULES)
     if args.only:

@@ -18,10 +18,16 @@ Modules
 spec     frozen, content-hashed trial descriptions (``DatasetSpec`` —
          synthetic stand-in, explicit dense shape, or real data via
          ``source="real"`` — × task × strategy × step × epochs)
-runner   cache-first execution with vmap step-stacking
+runner   cache-first execution with vmap step-stacking; attach a
+         ``repro.sweep`` executor to dispatch cache misses across N
+         worker processes (DESIGN.md §6)
 tuner    the §6.1 step-size grid search as a reusable autotuner
+         (rank ties break on canonical step order, so multi-worker and
+         single-host sweeps pick identical steps)
 store    deterministic ``BENCH_study.json`` + append-only run JSONL
-advisor  the paper's Table 6 as a queryable API (``recommend``)
+         (incl. sweep provenance events: worker/shard/merge)
+advisor  the paper's Table 6 as a queryable API (``recommend``), with
+         a calibratable epoch-cost model (``calibrate``)
 claims   paper-claim predicates validated against sweep rows
 
 Quickstart

@@ -16,8 +16,13 @@ seeded runs — deterministic) and ``epoch_cost`` is, by default, a
 deterministic roofline-flavored hardware model (``modeled_epoch_cost``),
 so the ranking is reproducible under a fixed seed.  ``rank="measured"``
 substitutes measured wall time per epoch (the paper's actual Table-6
-protocol; benchmarks use it, tests use the default).  The measured
-evidence is attached to every ranked row either way.
+protocol; benchmarks use it, tests use the default), and
+``rank="calibrated"`` keeps the deterministic model but with its
+constants **fit to this host**: ``calibrate(store)`` least-squares the
+cost model against the measured wall-times already recorded in
+``BENCH_study.json`` (falling back to the fixed defaults below a
+minimum trial count).  The measured evidence is attached to every
+ranked row either way.
 
 Usage — "what should I run on this dataset, on this host?"::
 
@@ -41,6 +46,8 @@ import dataclasses
 import math
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from repro.core import convergence, sgd
 from repro.study import tuner as tuner_mod
 from repro.study.runner import Runner, TrialResult
@@ -51,6 +58,15 @@ from repro.study.spec import (DatasetProfile, DatasetSpec, TrialSpec,
 UPDATE_OVERHEAD = 16.0     # fixed cost of applying one model update
 MERGE_UNIT = 1.0           # per (replica × feature) cost of a merge
 
+#: below this many measured trials, calibrate() keeps the fixed defaults
+CALIBRATION_MIN_TRIALS = 8
+
+
+#: per-device example-lane estimate: a TPU core's (8, 128) vregs vs a
+#: handful of SIMD lanes on CPU/GPU-less hosts
+_LANES_PER_DEVICE = {"tpu": 128 * 8}
+_DEFAULT_LANES = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class HostCaps:
@@ -60,19 +76,29 @@ class HostCaps:
     simultaneously (the paper's thread/warp count analogue); replicas and
     batch rows vectorize up to this width.  ``backends`` — the kernel
     dispatch registry's available backends per family, from
-    ``kernels.common.available_backends``.
+    ``kernels.common.available_backends``.  ``platform`` /
+    ``device_count`` record what ``detect`` saw in ``jax.devices()``
+    (an attached TPU topology scales ``parallel_width`` by its device
+    count) — provenance fields; the cost model reads only the width.
     """
 
     parallel_width: int
     max_replicas: int
     backends: Mapping[str, tuple[str, ...]]
+    platform: str = "cpu"
+    device_count: int = 1
 
     @classmethod
     def detect(cls) -> "HostCaps":
+        import jax
+
         import repro.kernels  # noqa: F401 — registers all families
         from repro.kernels import common as kcommon
 
-        width = 128 * 8 if kcommon.on_tpu() else 8
+        devices = jax.devices()
+        platform = devices[0].platform if devices else "cpu"
+        width = _LANES_PER_DEVICE.get(platform, _DEFAULT_LANES) \
+            * max(1, len(devices))
         # replica count is a *statistical* axis, not a lane budget: the vmap
         # engine emulates thread-granularity replication (R >> lanes) on any
         # host; the cost model charges the serialization, not the space.
@@ -83,7 +109,14 @@ class HostCaps:
                 fam: kcommon.available_backends(fam)
                 for fam in ("glm_grad", "glm_sgd", "glm_sparse")
             },
+            platform=platform,
+            device_count=len(devices),
         )
+
+    def to_dict(self) -> dict:
+        dct = dataclasses.asdict(self)
+        dct["backends"] = {k: list(v) for k, v in self.backends.items()}
+        return dct
 
 
 # ---------------------------------------------------------------------------
@@ -91,28 +124,52 @@ class HostCaps:
 # ---------------------------------------------------------------------------
 
 
-def modeled_epoch_cost(profile: DatasetProfile, strategy,
-                       caps: HostCaps) -> float:
-    """Relative cost of one epoch, in feature-ops on ``caps``.
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """The constants of ``modeled_epoch_cost``, fixed or fitted.
 
-    A coarse roofline: work vectorizes up to ``parallel_width`` lanes,
-    every model update pays a fixed overhead (the batch-vs-incremental
-    trade), replica merges pay R×d.  The absolute scale is meaningless;
-    only ratios between candidate configurations matter, and those
-    reproduce the paper's qualitative trade-offs:
+    The default instance reproduces the hand-picked feature-op units
+    (``scale=1.0``); ``calibrate`` returns one whose constants are
+    least-squares fit to measured wall-times, with ``scale`` carrying
+    the feature-ops→seconds conversion for this host.  Only *ratios*
+    between candidate configurations matter to the ranking either way.
+    """
 
-    * more replicas ⇒ smaller partitions ⇒ cheaper epochs (hardware
-      efficiency up — paper Fig. 12);
-    * rep-k halos ⇒ each replica processes k extra examples (Fig. 15);
-    * full-batch sync ⇒ one update per epoch, fully vectorized — the
-      cheapest pass but the least statistically efficient (Fig. 22).
+    update_overhead: float = UPDATE_OVERHEAD
+    merge_unit: float = MERGE_UNIT
+    scale: float = 1.0
+    source: str = "default"         # "default" | "calibrated"
+    n_trials: int = 0               # measured trials behind a fit
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+DEFAULT_COST_MODEL = CostModel()
+
+
+def cost_features(profile: DatasetProfile, strategy,
+                  caps: HostCaps) -> tuple[float, float, float]:
+    """The cost model's linear decomposition for one configuration.
+
+    Returns ``(base, updates, merges)`` such that
+
+        epoch_cost = scale × (base
+                              + update_overhead × updates
+                              + merge_unit × merges)
+
+    — the form both ``modeled_epoch_cost`` and the least-squares fit in
+    ``calibrate`` consume.  ``base`` is the vectorized feature-op work,
+    ``updates`` counts sequential model updates (each paying the fixed
+    update overhead), ``merges`` counts replica-merge traffic in
+    (R × d / width) units.
     """
     n, nnz, d = profile.n, profile.nnz_per_example, profile.d
     W = max(1, caps.parallel_width)
     if isinstance(strategy, sgd.SyncSGD):
         batch = strategy.batch or n
         updates = math.ceil(n / batch)
-        return n * nnz / min(batch, W) + updates * UPDATE_OVERHEAD
+        return n * nnz / min(batch, W), float(updates), 0.0
     assert isinstance(strategy, sgd.AsyncLocalSGD)
     R = strategy.replicas
     per = n // R + strategy.rep_k
@@ -120,11 +177,106 @@ def modeled_epoch_cost(profile: DatasetProfile, strategy,
     lanes_per_replica = max(1, W // R)
     chain = math.ceil(per / strategy.local_batch)    # sequential updates
     work = per * nnz / min(strategy.local_batch, lanes_per_replica)
-    replica_work = work + chain * UPDATE_OVERHEAD
     waves = math.ceil(R / W)        # more replicas than lanes ⇒ they serialize
     merges = max(1, int(round(1.0 / strategy.merge_every))) \
         if strategy.merge_every <= 1 else 1
-    return merges * (replica_work * waves + MERGE_UNIT * R * d / W)
+    return (merges * work * waves, float(merges * chain * waves),
+            merges * R * d / W)
+
+
+def modeled_epoch_cost(profile: DatasetProfile, strategy, caps: HostCaps,
+                       model: CostModel = DEFAULT_COST_MODEL) -> float:
+    """Relative cost of one epoch, in feature-ops on ``caps``.
+
+    A coarse roofline: work vectorizes up to ``parallel_width`` lanes,
+    every model update pays a fixed overhead (the batch-vs-incremental
+    trade), replica merges pay R×d.  With the default ``model`` the
+    absolute scale is meaningless; only ratios between candidate
+    configurations matter, and those reproduce the paper's qualitative
+    trade-offs:
+
+    * more replicas ⇒ smaller partitions ⇒ cheaper epochs (hardware
+      efficiency up — paper Fig. 12);
+    * rep-k halos ⇒ each replica processes k extra examples (Fig. 15);
+    * full-batch sync ⇒ one update per epoch, fully vectorized — the
+      cheapest pass but the least statistically efficient (Fig. 22).
+
+    A ``calibrate``d model keeps the same structure but host-fitted
+    constants (and a seconds scale), per Shi et al.'s finding that
+    configuration rankings need per-host cost calibration.
+    """
+    base, updates, merges = cost_features(profile, strategy, caps)
+    return model.scale * (base + model.update_overhead * updates
+                          + model.merge_unit * merges)
+
+
+def calibrate(store, caps: HostCaps | None = None, *,
+              min_trials: int = CALIBRATION_MIN_TRIALS) -> CostModel:
+    """Fit the cost model's constants to measured wall-times in a store.
+
+    ``store`` is a ``StudyStore``, a loaded snapshot dict, or a path to
+    ``BENCH_study.json`` — anything holding trial records (spec +
+    ``derived.time_per_epoch_s``).  Each usable trial contributes one
+    least-squares row ``t ≈ k·base + k·U·updates + k·M·merges`` (linear
+    in ``(k, k·U, k·M)``); the solve is ``np.linalg.lstsq`` —
+    deterministic for fixed inputs.
+
+    Falls back to ``DEFAULT_COST_MODEL`` (the fixed constants) whenever
+    the fit would not be trustworthy: fewer than ``min_trials`` usable
+    measured trials, or a degenerate/non-physical solution (non-positive
+    scale).  Negative fitted constants clamp to 0 — a host where merges
+    are free is plausible; one where they pay you is not.
+
+    A record only contributes if its stored key matches the key this
+    host recomputes from the spec — for real datasets that key embeds
+    the ingested content hash, so wall-times measured against different
+    bytes (a store from a full-download host calibrated against the
+    bundled fixtures, say) are skipped rather than fit against the
+    wrong (n, d, nnz) features.
+    """
+    caps = caps or HostCaps.detect()
+    profiles: dict = {}
+    rows: list[tuple[float, float, float]] = []
+    times: list[float] = []
+    for key, rec in _store_trials(store):
+        try:
+            trial = TrialSpec.from_dict(rec["spec"])
+            t = float(rec["derived"]["time_per_epoch_s"])
+            if trial.key != key:
+                continue        # measured against data this host doesn't have
+        except (KeyError, TypeError, ValueError, OSError):
+            # OSError: a real dataset whose bytes this host cannot resolve
+            # at all (no cached download, no fixture) — skip, don't abort
+            continue
+        if not (math.isfinite(t) and t > 0):
+            continue
+        if trial.dataset not in profiles:
+            profiles[trial.dataset] = trial.dataset.profile()
+        rows.append(cost_features(profiles[trial.dataset], trial.strategy,
+                                  caps))
+        times.append(t)
+    if len(rows) < min_trials:
+        return DEFAULT_COST_MODEL
+    A = np.asarray(rows, dtype=np.float64)
+    b = np.asarray(times, dtype=np.float64)
+    coef, _, rank, _ = np.linalg.lstsq(A, b, rcond=None)
+    k, ku, km = (float(c) for c in coef)
+    if rank < A.shape[1] or k <= 0 or not math.isfinite(k):
+        return DEFAULT_COST_MODEL
+    return CostModel(update_overhead=max(0.0, ku / k),
+                     merge_unit=max(0.0, km / k),
+                     scale=k, source="calibrated", n_trials=len(rows))
+
+
+def _store_trials(store) -> list[tuple[str, dict]]:
+    """(key, record) pairs from a StudyStore, a snapshot dict, or a path."""
+    from repro.study.store import StudyStore
+
+    if isinstance(store, (str, bytes)) or hasattr(store, "__fspath__"):
+        store = StudyStore.load(store)
+    if isinstance(store, StudyStore):
+        return list(store.trials.items())
+    return list(store.get("trials", {}).items())
 
 
 # ---------------------------------------------------------------------------
@@ -226,6 +378,7 @@ def recommend(
     tolerance: float = 0.01,
     seed: int = 0,
     rank: str = "modeled",
+    cost_model: "CostModel | object | None" = None,
 ) -> Recommendation:
     """Answer the paper's Table-6 question for one dataset/host/task.
 
@@ -233,8 +386,18 @@ def recommend(
     instance matching ``profile`` and returns configurations ranked by
     projected time-to-convergence.  Deterministic under a fixed seed with
     the default ``rank="modeled"``; ``rank="measured"`` uses wall time
-    per epoch instead of the cost model (the benchmark protocol).
+    per epoch instead of the cost model (the benchmark protocol);
+    ``rank="calibrated"`` ranks with host-fitted cost constants — pass
+    ``cost_model=calibrate(store)`` (or the store/path itself, which is
+    calibrated in place; omitted, it falls back to the fixed defaults,
+    mirroring ``calibrate``'s own too-few-trials fallback).
     """
+    if rank not in ("modeled", "measured", "calibrated"):
+        raise ValueError(f"rank must be modeled|measured|calibrated: {rank!r}")
+    if cost_model is not None and rank != "calibrated":
+        raise ValueError(
+            f"cost_model is only consulted with rank='calibrated' "
+            f"(got rank={rank!r}); drop it or set the rank")
     if isinstance(profile, str):
         dspec = DatasetSpec(profile, seed=seed)
     elif isinstance(profile, DatasetSpec):
@@ -247,14 +410,24 @@ def recommend(
     space = list(space) if space is not None else candidate_space(prof, caps)
     if not space:
         raise ValueError(f"empty candidate space for {prof}")
-    rank_by_run = "epochs" if rank == "modeled" else "time"
+    if rank == "calibrated":
+        if cost_model is None:
+            model = DEFAULT_COST_MODEL
+        elif isinstance(cost_model, CostModel):
+            model = cost_model
+        else:       # a store / snapshot / path: calibrate it here
+            model = calibrate(cost_model, caps)
+    else:
+        model = DEFAULT_COST_MODEL
+    rank_by_run = "time" if rank == "measured" else "epochs"
 
-    tuned: list[tuple[object, tuner_mod.TuneResult]] = []
-    for strat in space:
-        base = TrialSpec(dataset=dspec, task=task, strategy=strat,
-                         step=steps[0], epochs=epochs, seed=seed)
-        tuned.append((strat, tuner_mod.tune_step(
-            runner, base, steps=steps, by=rank_by_run)))
+    # one batched dispatch for the whole candidate space: with a sweep
+    # executor attached, every candidate's step grid fans out at once
+    bases = [TrialSpec(dataset=dspec, task=task, strategy=strat,
+                       step=steps[0], epochs=epochs, seed=seed)
+             for strat in space]
+    tuned = list(zip(space, tuner_mod.tune_many(
+        runner, bases, steps=steps, by=rank_by_run)))
 
     # common target: within `tolerance` of the best loss seen anywhere
     all_results: list[TrialResult] = [
@@ -266,8 +439,8 @@ def recommend(
     for strat, t in tuned:
         res = t.best_result
         e = res.epochs_to(target)
-        cost = (modeled_epoch_cost(prof, strat, caps) if rank == "modeled"
-                else res.time_per_epoch)
+        cost = (res.time_per_epoch if rank == "measured"
+                else modeled_epoch_cost(prof, strat, caps, model=model))
         score = (e * cost) if e is not None else math.inf
         rows.append(RankedConfig(
             strategy=strat, score=score, epochs_to_target=e, epoch_cost=cost,

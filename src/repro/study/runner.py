@@ -13,7 +13,17 @@ The runner turns ``TrialSpec``s into ``TrialResult``s:
   ``[S]`` step vector.  Wall time is measured for the stack and
   amortized per trial (flagged ``stacked`` in the result meta);
 * **dataset memoization** — datasets (synthetic generations and real
-  ingests alike) are materialized once per ``DatasetSpec`` per runner.
+  ingests alike) are materialized once per ``DatasetSpec`` per runner;
+* **executor dispatch** — with an ``executor`` attached (see
+  ``repro.sweep``), cache-miss trials spanning at least
+  ``dispatch_min_groups`` stack groups are not executed in-process:
+  they are handed to the executor, which must leave their payloads in
+  the canonical cache (N workers, merged), and the runner then reads
+  the results back from the cache.  A single stack group cannot
+  parallelize, so it runs in-process even with an executor attached.
+  Cache hits, store recording, and result ordering are identical
+  either way, which is what keeps ``BENCH_study.json`` a pure function
+  of the trial cache.
 
 Cache keys come from ``TrialSpec.key``; for ``source="real"`` specs
 that hash embeds the ingested matrix's content hash
@@ -96,17 +106,22 @@ class TrialCache:
         self.misses = 0
 
     def get(self, key: str) -> dict | None:
+        payload = self.peek(key)
+        if payload is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return payload
+
+    def peek(self, key: str) -> dict | None:
+        """``get`` without touching the hit/miss counters (merge re-reads)."""
         if self.root is None:
             return None
-        path = self.root / f"{key}.json"
         try:
-            with open(path) as f:
-                payload = json.load(f)
+            with open(self.root / f"{key}.json") as f:
+                return json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
-            self.misses += 1
             return None
-        self.hits += 1
-        return payload
 
     def put(self, key: str, payload: dict) -> None:
         if self.root is None:
@@ -134,11 +149,32 @@ class Runner:
     """Executes trial lists with caching, stacking, and store recording."""
 
     def __init__(self, cache_dir: str | Path | None = None, *,
-                 store=None, stack: bool = True):
+                 store=None, stack: bool = True, executor=None,
+                 dispatch_min_groups: int = 2):
         self.cache = TrialCache(cache_dir)
         self.store = store
         self.stack = stack
+        self.executor = executor        # validated by the property setter
+        #: dispatch to the executor only when at least this many stack
+        #: groups miss the cache: a single group cannot parallelize, and
+        #: running it in-process skips the subprocess cold start and keeps
+        #: the dataset memo warm (so `--workers` is never slower than
+        #: serial on single-grid call sites)
+        self.dispatch_min_groups = dispatch_min_groups
         self._datasets: dict[DatasetSpec, object] = {}
+
+    @property
+    def executor(self):
+        return self._executor
+
+    @executor.setter
+    def executor(self, executor) -> None:
+        # a property so post-construction attachment (benchmarks.run
+        # --workers sets it on the shared runner) fails fast too
+        if executor is not None and self.cache.root is None:
+            raise ValueError("an executor needs a canonical cache_dir to "
+                             "merge worker results into")
+        self._executor = executor
 
     def dataset(self, dspec: DatasetSpec):
         if dspec not in self._datasets:
@@ -161,20 +197,64 @@ class Runner:
             else:
                 pending.setdefault(t.stack_key, []).append(i)
 
-        for indices in pending.values():
-            group = [trials[i] for i in indices]
-            if self.stack and len(group) > 1 and _stackable(group[0]):
-                outs = self._run_stacked(group)
-            else:
-                outs = [self._run_single(t) for t in group]
-            for i, t, res in zip(indices, group, outs):
-                results[i] = res
-                self.cache.put(t.key, res.to_dict())
+        if pending and self.executor is not None \
+                and len(pending) >= self.dispatch_min_groups:
+            self._run_dispatched(trials, pending, results)
+        else:
+            for indices in pending.values():
+                group = [trials[i] for i in indices]
+                if self.stack and len(group) > 1 and _stackable(group[0]):
+                    outs = self._run_stacked(group)
+                else:
+                    outs = [self._run_single(t) for t in group]
+                for i, t, res in zip(indices, group, outs):
+                    results[i] = res
+                    self.cache.put(t.key, res.to_dict())
 
         for t, res in zip(trials, results):
             if self.store is not None:
                 self.store.record_trial(t, res)
         return results  # type: ignore[return-value]
+
+    def _run_dispatched(self, trials, pending, results) -> None:
+        """Hand cache misses to the executor, then read the merged cache.
+
+        The executor owns sharding, worker lifecycle, retries, and the
+        cache merge; its contract is simply that every requested key is
+        in the canonical cache afterwards.  Results are re-read from
+        the cache (not returned in-band) so the dispatched path and the
+        warm-cache path serve byte-identical payloads.
+        """
+        todo = [trials[i] for idxs in pending.values() for i in idxs]
+        try:
+            report = self.executor.execute(todo, self.cache,
+                                           stack=self.stack)
+        except Exception as exc:
+            # a failed sweep is when attribution matters most: executors
+            # attach their partial report to the failure (ShardFailure)
+            self._record_exec_events(getattr(exc, "report", None))
+            raise
+        self._record_exec_events(report)
+        for idxs in pending.values():
+            for i in idxs:
+                payload = self.cache.peek(trials[i].key)
+                if payload is None:
+                    raise RuntimeError(
+                        f"executor left no payload for {trials[i].label} "
+                        f"({trials[i].key})")
+                # computed this sweep (by a worker), not served from cache
+                results[i] = TrialResult.from_dict(payload, cached=False)
+
+    def _record_exec_events(self, report) -> None:
+        if report is None or self.store is None \
+                or not hasattr(self.store, "record_event"):
+            return
+        for run in report.shard_runs:
+            self.store.record_event("sweep_shard", **run.to_dict())
+        self.store.record_event(
+            "sweep_merge", executor=report.executor,
+            workers=report.workers, n_trials=report.n_trials,
+            retries=report.retries, **report.merge.to_dict())
 
     def _run_single(self, t: TrialSpec) -> TrialResult:
         ds = self.dataset(t.dataset)

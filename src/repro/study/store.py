@@ -12,7 +12,13 @@ flips between runs changes the file, but also fails the sweep loudly
 via the driver's non-zero exit, never a silent diff.)
 
 Run-to-run variance (timestamps, cache-hit counts, wall time) lives in
-the append-only JSONL sidecar, one line per sweep invocation.
+the append-only JSONL sidecar — one summary line per sweep invocation,
+preceded by any provenance **events** recorded during the run
+(``record_event``): distributed sweeps log one ``sweep_shard`` event
+per worker attempt (worker id, trial keys, wall time, requeues) and a
+``sweep_merge`` event per cache merge, so the perf trajectory can
+attribute wall time to workers.  Events never enter the deterministic
+``BENCH_study.json`` snapshot.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ class StudyStore:
         self.claims: dict = {"checked_modules": [], "violations": []}
         self._n_recorded = 0
         self._n_cached = 0
+        self._events: list[dict] = []
 
     # -- accumulation -------------------------------------------------------
 
@@ -48,6 +55,16 @@ class StudyStore:
                 "time_per_epoch_s": result.time_per_epoch,
             },
         }
+
+    def record_event(self, kind: str, **fields) -> None:
+        """Queue a provenance event for the JSONL sidecar (never the JSON).
+
+        Worker attribution, shard requeues, cache merges — anything
+        that varies run-to-run but explains *how* this sweep executed.
+        Events are flushed (and cleared) by ``write``, one JSONL line
+        each, before the run-summary line.
+        """
+        self._events.append({"event": kind, **fields})
 
     def record_claims(self, violations: list[str],
                       checked_modules: list[str]) -> None:
@@ -72,17 +89,21 @@ class StudyStore:
             json.dumps(self.snapshot(), sort_keys=True, indent=1) + "\n")
         if self.jsonl_path is not None:
             self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
-            line = canonical_json({
-                "ts": datetime.datetime.now(datetime.timezone.utc)
-                      .isoformat(timespec="seconds"),
+            ts = datetime.datetime.now(datetime.timezone.utc) \
+                         .isoformat(timespec="seconds")
+            lines = [canonical_json({"ts": ts, **ev}) for ev in self._events]
+            lines.append(canonical_json({
+                "ts": ts,
                 "json_path": str(self.json_path),
                 "n_trials": len(self.trials),
                 "n_recorded": self._n_recorded,
                 "n_cached": self._n_cached,
+                "n_events": len(self._events),
                 "n_violations": len(self.claims["violations"]),
-            })
+            }))
             with open(self.jsonl_path, "a") as f:
-                f.write(line + "\n")
+                f.write("".join(line + "\n" for line in lines))
+        self._events = []
         return self.json_path
 
     @staticmethod

@@ -11,6 +11,13 @@ program and every run lands in the trial cache), and applies the
 ``by="epochs"`` ranks on statistical efficiency only — no wall-clock in
 the decision — which is what makes the advisor deterministic under a
 fixed seed.  Benchmarks rank ``by="time"`` like the paper.
+
+``tune_many`` tunes several base specs through **one** ``runner.run``
+call — semantically identical to mapping ``tune_step``, but the union
+of the step grids is dispatched together, so an attached sweep
+executor (``repro.sweep``) sees every (base × step) stack group at
+once and can spread them across workers.  The advisor tunes its whole
+candidate space this way.
 """
 from __future__ import annotations
 
@@ -48,15 +55,45 @@ def tune_step(
     When ``target`` is None it is derived the paper's way: the lowest
     loss any grid member reached, within ``tolerance`` (default 1%).
     """
+    return tune_many(runner, [base], steps=steps, target=target,
+                     tolerance=tolerance, by=by)[0]
+
+
+def tune_many(
+    runner: Runner,
+    bases: Sequence[TrialSpec],
+    *,
+    steps: Sequence[float] | None = None,
+    target: float | None = None,
+    tolerance: float = 0.01,
+    by: str = "time",
+) -> list[TuneResult]:
+    """Tune every base spec's step size in one ``runner.run`` dispatch.
+
+    Equivalent to ``[tune_step(runner, b, ...) for b in bases]`` — each
+    base derives its target from its own grid when ``target`` is None —
+    but all (base × step) trials execute in a single runner call, which
+    is what lets a sweep executor fan the grids out across workers.
+    """
     steps = list(steps) if steps is not None else convergence.grid_step_sizes()
-    trials = [base.with_step(s) for s in steps]
+    trials = [b.with_step(s) for b in bases for s in steps]
     results = runner.run(trials)
-    by_step = dict(zip(steps, results))
-    if target is None:
-        opt = convergence.optimal_loss(results)
-        target = convergence.thresholds(opt, (tolerance,))[tolerance]
-    best_step = min(
-        steps, key=lambda s: convergence.rank_key(by_step[s], target, by=by))
-    return TuneResult(best=base.with_step(best_step),
-                      best_result=by_step[best_step],
-                      target=target, results=by_step)
+    out: list[TuneResult] = []
+    for i, base in enumerate(bases):
+        grid = results[i * len(steps):(i + 1) * len(steps)]
+        by_step = dict(zip(steps, grid))
+        tgt = target
+        if tgt is None:
+            opt = convergence.optimal_loss(grid)
+            tgt = convergence.thresholds(opt, (tolerance,))[tolerance]
+        # rank ties break on the canonical step order (smallest step wins),
+        # never on grid/cache arrival order — multi-worker and single-host
+        # sweeps must pick identical steps from identical results
+        best_step = min(
+            steps,
+            key=lambda s, t=tgt: (*convergence.rank_key(by_step[s], t, by=by),
+                                  s))
+        out.append(TuneResult(best=base.with_step(best_step),
+                              best_result=by_step[best_step],
+                              target=tgt, results=by_step))
+    return out

@@ -1,0 +1,47 @@
+"""Distributed sweep scheduler: multi-worker ``TrialSpec`` dispatch.
+
+The study subsystem (DESIGN.md §4) executes every trial serially on one
+host; this package is the execution layer that spreads a sweep across N
+workers while keeping the single-host reproducibility contract: a
+distributed sweep fills the *same* canonical trial cache a serial sweep
+would, so ``store.StudyStore`` — a pure function of trial results —
+writes the same ``BENCH_study.json`` either way (CI's sweep-smoke job
+asserts the bytes).
+
+Dataflow (DESIGN.md §6):
+
+    TrialSpec grid ──▶ plan.plan ──▶ N × [worker subprocess] ──▶ merge
+      (cache misses)   (stack-aware    (python -m repro.sweep.worker,    │
+       from Runner)     sharding)       private cache root each)         ▼
+                                                        canonical trial cache
+    Runner.run ◀── re-read merged payloads ◀─────────────────────────────┘
+
+Modules
+-------
+plan      stack-aware deterministic sharding (``plan``, ``Shard``) —
+          trials sharing a ``stack_key`` stay co-located so
+          vmap-stacking still amortizes compilation
+worker    the worker CLI (``python -m repro.sweep.worker``): one shard
+          file in, one private trial cache out, durable per stack group
+executor  the executor interface + ``LocalProcessExecutor``
+          (subprocess dispatch, bounded retries, dead-worker requeue)
+merge     ``merge_caches``: idempotent cache union with
+          same-key/different-payload conflict detection
+
+Quickstart — distribute any sweep by attaching an executor::
+
+    from repro.study.runner import Runner
+    from repro.sweep import LocalProcessExecutor
+
+    runner = Runner(cache_dir="bench_results/study_cache",
+                    executor=LocalProcessExecutor(workers=2))
+    runner.run(trials)      # cache misses dispatched across 2 workers
+
+``python -m benchmarks.run --workers N`` wires this into the full
+table/figure sweeps; docs/SWEEPS.md is the usage guide.
+"""
+from repro.sweep.executor import (ExecReport, LocalProcessExecutor,  # noqa: F401
+                                  ShardFailure, ShardRun)
+from repro.sweep.merge import (Conflict, MergeConflict, MergeReport,  # noqa: F401
+                               merge_caches)
+from repro.sweep.plan import Shard, plan  # noqa: F401

@@ -205,6 +205,43 @@ def test_tune_step_epochs_mode_is_wall_clock_free():
     assert a.best_step == b.best_step
 
 
+class _TiedRunner:
+    """Stub runner: every step yields the identical loss curve (full tie)."""
+
+    def run(self, trials):
+        return [TrialResult(losses=np.array([1.0, 0.5, 0.1]),
+                            epoch_times=np.array([0.1, 0.1]),
+                            strategy=t.strategy.name, task=t.task)
+                for t in trials]
+
+
+def test_tune_step_tie_breaks_on_canonical_step_order():
+    """Rank ties resolve to the smallest step, independent of the order
+    the grid arrives in — multi-worker and single-host sweeps must pick
+    identical steps from identical results."""
+    base = _trial(epochs=2)
+    for steps in [(1e-2, 1e-1, 1e-3), (1e-1, 1e-3, 1e-2), (1e-3, 1e-2, 1e-1)]:
+        t = tuner.tune_step(_TiedRunner(), base, steps=steps, by="epochs")
+        assert t.best_step == 1e-3
+
+
+def test_tune_many_matches_per_base_tune_step():
+    """One batched dispatch, same answers: tune_many is tune_step mapped
+    over bases (incl. per-base target derivation)."""
+    bases = [_trial(strategy=sgd.SyncSGD(), epochs=4),
+             _trial(strategy=sgd.AsyncLocalSGD(replicas=4), epochs=4)]
+    runner = Runner()
+    many = tuner.tune_many(runner, bases, steps=(1e-6, 1e-2, 1e-1),
+                           by="epochs")
+    singles = [tuner.tune_step(runner, b, steps=(1e-6, 1e-2, 1e-1),
+                               by="epochs") for b in bases]
+    assert len(many) == 2
+    for m, s in zip(many, singles):
+        assert m.best_step == s.best_step
+        assert m.target == s.target
+        assert set(m.results) == set(s.results)
+
+
 # ---------------------------------------------------------------------------
 # advisor: Table 6
 # ---------------------------------------------------------------------------
@@ -313,6 +350,149 @@ def test_recommend_to_dict_serializes():
     assert len(dct["ranked"]) == 2
     assert spec.strategy_from_dict(dct["ranked"][0]["strategy"]) == \
         rec.best.strategy
+
+
+def _calibration_store(k=2e-6, U=24.0, M=3.0, caps=CAPS):
+    """A synthetic BENCH_study-shaped snapshot whose measured wall times
+    follow the cost model exactly, with known constants."""
+    strats = [sgd.SyncSGD(), sgd.SyncSGD(batch=8), sgd.SyncSGD(batch=32),
+              sgd.AsyncLocalSGD(replicas=4), sgd.AsyncLocalSGD(replicas=16),
+              sgd.AsyncLocalSGD(replicas=8, rep_k=4),
+              sgd.AsyncLocalSGD(replicas=8, merge_every=0.25),
+              sgd.AsyncLocalSGD(replicas=4, local_batch=4)]
+    trials = {}
+    for name, max_n in (("covtype", 128), ("w8a", 256)):
+        ds = spec.DatasetSpec(name, max_n=max_n)
+        prof = ds.profile()
+        for s in strats:
+            t = spec.TrialSpec(ds, "lr", s, 1e-2, 4)
+            base, u, m = advisor.cost_features(prof, s, caps)
+            trials[t.key] = {
+                "spec": t.to_dict(),
+                "derived": {"time_per_epoch_s": k * (base + U * u + M * m)},
+            }
+    return {"trials": trials}
+
+
+def test_cost_features_decomposition_matches_modeled_cost():
+    prof = spec.DatasetSpec("covtype", max_n=1024).profile()
+    for s in (sgd.SyncSGD(), sgd.SyncSGD(batch=16),
+              sgd.AsyncLocalSGD(replicas=8, rep_k=10, merge_every=0.5)):
+        base, u, m = advisor.cost_features(prof, s, CAPS)
+        assert advisor.modeled_epoch_cost(prof, s, CAPS) == pytest.approx(
+            base + advisor.UPDATE_OVERHEAD * u + advisor.MERGE_UNIT * m)
+
+
+def test_calibrate_recovers_planted_constants_and_is_deterministic():
+    snap = _calibration_store(k=2e-6, U=24.0, M=3.0)
+    model = advisor.calibrate(snap, CAPS)
+    assert model.source == "calibrated"
+    assert model.n_trials == len(snap["trials"])
+    assert model.scale == pytest.approx(2e-6)
+    assert model.update_overhead == pytest.approx(24.0)
+    assert model.merge_unit == pytest.approx(3.0)
+    assert advisor.calibrate(snap, CAPS) == model
+
+
+def test_calibrate_falls_back_below_min_trials_and_on_degenerate_fits():
+    assert advisor.calibrate({"trials": {}}, CAPS) == \
+        advisor.DEFAULT_COST_MODEL
+    # below the floor even with valid rows
+    snap = _calibration_store()
+    few = {"trials": dict(list(snap["trials"].items())[2:5])}  # sync + async
+    assert advisor.calibrate(few, CAPS) == advisor.DEFAULT_COST_MODEL
+    assert advisor.calibrate(few, CAPS, min_trials=3).source == "calibrated"
+    # sync-only stores can't identify the merge constant: rank-deficient
+    sync_only = {"trials": {
+        key: rec for key, rec in snap["trials"].items()
+        if rec["spec"]["strategy"]["kind"] == "sync"}}
+    assert advisor.calibrate(sync_only, CAPS, min_trials=3) == \
+        advisor.DEFAULT_COST_MODEL
+    # junk records are skipped, not fatal
+    junk = {"trials": {"x": {"spec": {}},
+                       "y": {"derived": {"time_per_epoch_s": -1.0}}}}
+    assert advisor.calibrate(junk, CAPS) == advisor.DEFAULT_COST_MODEL
+
+
+def test_calibrate_skips_records_whose_key_this_host_cannot_reproduce():
+    """Wall-times measured against data this host doesn't have (stored
+    key != locally recomputed key, e.g. a full-download store calibrated
+    on a fixtures-only host) must not contribute features to the fit."""
+    snap = _calibration_store()
+    # remap every record under a foreign key: nothing is fittable
+    foreign = {"trials": {f"deadbeef{i:08x}": rec for i, rec in
+                          enumerate(snap["trials"].values())}}
+    assert advisor.calibrate(foreign, CAPS) == advisor.DEFAULT_COST_MODEL
+    # a real-dataset record this host cannot resolve at all (no download,
+    # no bundled fixture) is skipped, not a crash
+    mixed = dict(snap["trials"])
+    mixed["feedfacefeedface"] = {
+        "spec": {"dataset": {"name": "rcv1", "source": "real"},
+                 "task": "lr", "strategy": {"kind": "sync"},
+                 "step": 1e-2, "epochs": 4, "seed": 0},
+        "derived": {"time_per_epoch_s": 1.0},
+    }
+    model = advisor.calibrate({"trials": mixed}, CAPS)
+    assert model.source == "calibrated"
+    assert model.n_trials == len(snap["trials"])    # rcv1 contributed nothing
+    # a store whose keys check out still fits
+    assert advisor.calibrate(snap, CAPS).source == "calibrated"
+
+
+def test_calibrate_reads_a_written_store(tmp_path):
+    st = store.StudyStore(tmp_path / "out.json")
+    r = Runner(cache_dir=tmp_path / "cache", store=st)
+    for s in (1e-3, 1e-2, 1e-1):
+        r.run_trial(_trial(step=s, epochs=2))
+    st.write()
+    # 3 trials < floor -> defaults, via path, snapshot dict, and StudyStore
+    for src in (tmp_path / "out.json", str(tmp_path / "out.json"),
+                store.StudyStore.load(tmp_path / "out.json"), st):
+        assert advisor.calibrate(src, CAPS) == advisor.DEFAULT_COST_MODEL
+
+
+def test_recommend_rank_calibrated_uses_fitted_model():
+    model = advisor.calibrate(_calibration_store(), CAPS)
+    space = [sgd.SyncSGD(), sgd.AsyncLocalSGD(replicas=4, local_batch=1)]
+    prof = spec.DatasetSpec("covtype", max_n=128).profile()
+    rec = advisor.recommend(prof, CAPS, runner=Runner(), epochs=3,
+                            steps=(1e-2,), space=space,
+                            rank="calibrated", cost_model=model)
+    assert rec.rank_by == "calibrated"
+    for row in rec.ranked:
+        assert row.epoch_cost == pytest.approx(advisor.modeled_epoch_cost(
+            prof, row.strategy, CAPS, model=model))
+    # no model supplied -> fixed defaults (same numbers as rank="modeled")
+    rec_default = advisor.recommend(prof, CAPS, runner=Runner(), epochs=3,
+                                    steps=(1e-2,), space=space,
+                                    rank="calibrated")
+    rec_modeled = advisor.recommend(prof, CAPS, runner=Runner(), epochs=3,
+                                    steps=(1e-2,), space=space)
+    assert [r.epoch_cost for r in rec_default.ranked] == \
+        [r.epoch_cost for r in rec_modeled.ranked]
+    with pytest.raises(ValueError, match="rank"):
+        advisor.recommend(prof, CAPS, runner=Runner(), epochs=2,
+                          steps=(1e-2,), space=space, rank="bogus")
+    # a supplied model is never silently ignored: wrong rank is an error
+    with pytest.raises(ValueError, match="cost_model"):
+        advisor.recommend(prof, CAPS, runner=Runner(), epochs=2,
+                          steps=(1e-2,), space=space, cost_model=model)
+
+
+def test_hostcaps_detect_reads_jax_devices_and_registry():
+    import jax
+
+    caps = advisor.HostCaps.detect()
+    devices = jax.devices()
+    assert caps.device_count == len(devices)
+    assert caps.platform == devices[0].platform
+    per_device = caps.parallel_width // caps.device_count
+    assert per_device >= 8      # at least the CPU lane floor
+    for fam in ("glm_grad", "glm_sgd", "glm_sparse"):
+        assert "reference" in caps.backends[fam]
+    dct = caps.to_dict()
+    assert dct["platform"] == caps.platform
+    assert isinstance(dct["backends"]["glm_grad"], list)
 
 
 def test_candidate_space_respects_host_and_dataset():
