@@ -260,19 +260,23 @@ def make_epoch_fn(
                 "the step size as a compile-time constant)")
 
         if sparse_data:
-            if backend is not None and batch < n:
-                raise ValueError(
-                    "kernel_backend on sparse data needs full-batch updates "
-                    "(glm_sparse is a sum-gradient kernel; no sparse epoch "
-                    "kernel is registered)")
             if backend is not None:
+                # full-batch -> glm_sparse (sum gradient); mini-batch ->
+                # glm_sgd_sparse (fused epoch, model resident in VMEM)
+                from repro.kernels.glm_sgd_sparse import (
+                    ell_sgd_epoch as _kepoch_sp,
+                )
                 from repro.kernels.glm_sparse import ell_glm_grad as _kgrad_sp
 
                 @jax.jit
                 def epoch(w):
-                    g = _kgrad_sp(task, w, m.values, m.indices, y,
-                                  backend=backend)
-                    return w - step0 * g
+                    if batch >= n:
+                        g = _kgrad_sp(task, w, m.values, m.indices, y,
+                                      backend=backend)
+                        return w - step0 * g
+                    return _kepoch_sp(task, w, m.values, m.indices, y,
+                                      step=step0, micro_batch=batch,
+                                      backend=backend)
 
             else:
 
@@ -339,20 +343,36 @@ def make_epoch_fn(
         y_p = jnp.take(y, parts, axis=0)
 
         if backend is not None:
-            if strategy.local_batch != per:
+            if strategy.local_batch == per:
+                # full-partition update: glm_sparse sum gradient
+                from repro.kernels.glm_sparse import ell_glm_grad as _kgrad_sp
+
+                def _replica_epoch(W, step):
+                    def one(w, v, i, yr):
+                        g = _kgrad_sp(task, w, v, i, yr, backend=backend)
+                        return w - (step / per) * g
+
+                    return jax.vmap(one)(W, vals_p, idx_p, y_p)
+
+            elif per % strategy.local_batch == 0:
+                # mini-batch local updates: fused sparse-SGD epoch kernel
+                from repro.kernels.glm_sgd_sparse import (
+                    ell_sgd_epoch as _kepoch_sp,
+                )
+
+                def _replica_epoch(W, step):
+                    def one(w, v, i, yr):
+                        return _kepoch_sp(task, w, v, i, yr, step=step,
+                                          micro_batch=strategy.local_batch,
+                                          backend=backend)
+
+                    return jax.vmap(one)(W, vals_p, idx_p, y_p)
+
+            else:
                 raise ValueError(
-                    "kernel_backend on sparse data needs full-partition "
-                    f"local updates: local_batch must equal the partition "
-                    f"size {per} (= n//replicas + rep_k; glm_sparse is a "
-                    "sum-gradient kernel)")
-            from repro.kernels.glm_sparse import ell_glm_grad as _kgrad_sp
-
-            def _replica_epoch(W, step):
-                def one(w, v, i, yr):
-                    g = _kgrad_sp(task, w, v, i, yr, backend=backend)
-                    return w - (step / per) * g
-
-                return jax.vmap(one)(W, vals_p, idx_p, y_p)
+                    f"kernel_backend epochs need local_batch to divide the "
+                    f"partition size {per} (= n//replicas + rep_k), got "
+                    f"{strategy.local_batch}")
 
         else:
 

@@ -249,11 +249,28 @@ def padded(size: int, multiple: int) -> int:
 
 def pick_block(size: int, preferred: int, multiple: int = 1) -> int:
     """Largest block <= preferred that divides ``size`` and is a multiple of
-    ``multiple`` — fall back to ``size`` itself (single block)."""
+    ``multiple``.
+
+    When no such block exists the only always-correct fallback is the
+    whole extent as a single block — valid only if ``size`` itself is a
+    multiple of ``multiple``.  A ``size`` that is not (prime/odd sizes,
+    e.g. ``pick_block(6, 128, 8)``) used to fall through to ``size``
+    anyway, handing kernels a sublane-misaligned block; now it raises so
+    callers either pad the operand first or route to a backend without
+    the alignment constraint (the dispatch caps do the latter).
+    """
     best = None
     b = multiple
     while b <= min(preferred, size):
         if size % b == 0:
             best = b
         b += multiple
-    return best if best is not None else size
+    if best is not None:
+        return best
+    if size % multiple == 0:
+        return size  # single aligned block (may exceed preferred)
+    raise ValueError(
+        f"no block <= {preferred} divides size {size} at multiple "
+        f"{multiple}, and {size} is not itself a multiple of {multiple}; "
+        f"pad the operand to {padded(size, multiple)} or pick a backend "
+        f"without the alignment constraint")

@@ -12,11 +12,30 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import common
+from repro.kernels import common, tune
 from repro.kernels.flash_attn import kernel as K
 from repro.kernels.flash_attn import ref as R
 
-_PALLAS_CAPS = common.Caps(head_dim_multiple=common.SUBLANE)
+
+def _seq_blocks_ok(info: dict) -> bool:
+    """Pallas needs seq extents blockable: pinned blocks must divide the
+    sequence; unpinned sequences must be sublane-aligned so ``pick_block``
+    can find an aligned block (it raises on prime/odd extents now instead
+    of silently returning a misaligned one)."""
+    for s_key, b_key in (("seq_q", "block_q"), ("seq_k", "block_k")):
+        s, b = info.get(s_key), info.get(b_key)
+        if s is None:
+            continue
+        if b is not None:
+            if s % b != 0:
+                return False
+        elif s % common.SUBLANE != 0:
+            return False
+    return True
+
+
+_PALLAS_CAPS = common.Caps(head_dim_multiple=common.SUBLANE,
+                           check=_seq_blocks_ok)
 
 
 def _gqa_broadcast(q, k, v):
@@ -87,14 +106,34 @@ def flash_attention(
     backend: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Flash attention with GQA broadcast.  Returns [B, Hq, Sq, hd]."""
+    """Flash attention with GQA broadcast.  Returns [B, Hq, Sq, hd].
+
+    Unpinned ``block_q``/``block_k`` consult the autotuner cache
+    (:mod:`repro.kernels.tune`), then fall back to ``pick_block``'s
+    lane-aligned heuristic inside the Pallas wrapper.
+    """
     hd = q.shape[3]
     assert q.shape[1] % k.shape[1] == 0, (q.shape[1], k.shape[1])
-    info = {"dtype": jnp.result_type(q).name, "head_dim": hd}
+    info = {"dtype": jnp.result_type(q).name, "head_dim": hd,
+            "seq_q": q.shape[2], "seq_k": k.shape[2]}
+    if block_q is not None:
+        info["block_q"] = block_q
+    if block_k is not None:
+        info["block_k"] = block_k
+    b = common.resolve_backend("flash_attn", backend=backend,
+                               interpret=interpret, info=info)
+    if block_q is None and block_k is None:
+        run = None
+        if tune.timeable(q, k, v):
+            run = lambda **cfg: common.dispatch(  # noqa: E731
+                "flash_attn", q, k, v, causal=causal, window=window,
+                backend=b, **cfg)
+        cfg = tune.consult("flash_attn", b, info, run)
+        block_q, block_k = cfg.get("block_q"), cfg.get("block_k")
     return common.dispatch(
         "flash_attn", q, k, v, causal=causal, window=window,
         block_q=block_q, block_k=block_k,
-        backend=backend, interpret=interpret, info=info,
+        backend=b, info=info,
     )
 
 

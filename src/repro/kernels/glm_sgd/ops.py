@@ -3,6 +3,14 @@
 The ``reference`` flavor is the sequential lax.scan oracle (ref.py); the
 Pallas flavors run one kernel launch per epoch with the model pinned in
 VMEM.  All flavors update in fp32.
+
+The Pallas flavors need ``n`` divisible by ``micro_batch`` (the epoch is
+a fixed-shape grid of micro-batch tiles): the dispatch caps see both in
+the call info, so auto-selection falls through to ``reference`` (which
+handles the ragged tail) instead of dying inside the kernel — forcing a
+Pallas flavor onto a non-divisible ``n`` raises ``ValueError``.  When
+the caller does not pin ``micro_batch``, the per-device autotuner cache
+(:mod:`repro.kernels.tune`) is consulted before the built-in default.
 """
 from __future__ import annotations
 
@@ -11,9 +19,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import common
+from repro.kernels import common, tune
 from repro.kernels.glm_sgd import kernel as K
 from repro.kernels.glm_sgd import ref as R
+
+#: built-in micro-batch when neither the caller nor the tuner pins one
+DEFAULT_MICRO_BATCH = 8
+
+
+def _check_divisible(n: int, micro_batch: int) -> None:
+    if micro_batch < 1 or n % micro_batch:
+        raise ValueError(
+            f"glm_sgd Pallas flavors need n % micro_batch == 0, got "
+            f"n={n}, micro_batch={micro_batch}; drop the explicit backend "
+            f"to fall through to 'reference' (ragged-tail oracle) or pick "
+            f"a divisor of n")
+
+
+_PALLAS_CAPS = common.Caps(check=lambda info: (
+    info.get("n") is None or info.get("micro_batch") is None
+    or (info["micro_batch"] >= 1 and info["n"] % info["micro_batch"] == 0)))
 
 
 @functools.partial(
@@ -22,11 +47,11 @@ from repro.kernels.glm_sgd import ref as R
 def _pallas(task, w, X, y, *, step, micro_batch, interpret):
     """One fused SGD epoch over (X, y); model stays in VMEM throughout.
 
-    N must be divisible by ``micro_batch`` (the data pipeline guarantees
-    this); d is padded to the 128-lane tile internally.
+    N must be divisible by ``micro_batch`` (checked, ValueError); d is
+    padded to the 128-lane tile internally.
     """
     n, d = X.shape
-    assert n % micro_batch == 0, (n, micro_batch)
+    _check_divisible(n, micro_batch)
     d_pad = common.padded(d, common.LANE)
     Xp = common.pad_to(X.astype(jnp.float32), 1, d_pad)
     yp = y.astype(jnp.float32).reshape(n, 1)
@@ -37,21 +62,21 @@ def _pallas(task, w, X, y, *, step, micro_batch, interpret):
     return w_out[:d, 0]
 
 
-@common.register_kernel("glm_sgd", common.PALLAS_TPU)
-def _glm_sgd_tpu(task, w, X, y, *, step, micro_batch=8):
+@common.register_kernel("glm_sgd", common.PALLAS_TPU, caps=_PALLAS_CAPS)
+def _glm_sgd_tpu(task, w, X, y, *, step, micro_batch=DEFAULT_MICRO_BATCH):
     return _pallas(task, w, X, y, step=step, micro_batch=micro_batch,
                    interpret=False)
 
 
-@common.register_kernel("glm_sgd", common.PALLAS_INTERPRET)
-def _glm_sgd_interpret(task, w, X, y, *, step, micro_batch=8):
+@common.register_kernel("glm_sgd", common.PALLAS_INTERPRET, caps=_PALLAS_CAPS)
+def _glm_sgd_interpret(task, w, X, y, *, step, micro_batch=DEFAULT_MICRO_BATCH):
     return _pallas(task, w, X, y, step=step, micro_batch=micro_batch,
                    interpret=True)
 
 
 @common.register_kernel("glm_sgd", common.REFERENCE, caps=common.Caps(dtypes=None))
 @functools.partial(jax.jit, static_argnames=("task", "step", "micro_batch"))
-def _glm_sgd_reference(task, w, X, y, *, step, micro_batch=8):
+def _glm_sgd_reference(task, w, X, y, *, step, micro_batch=DEFAULT_MICRO_BATCH):
     return R.glm_sgd_epoch_ref(
         task, w.astype(jnp.float32), X.astype(jnp.float32),
         y.astype(jnp.float32), step, micro_batch,
@@ -65,12 +90,28 @@ def glm_sgd_epoch(
     y: jax.Array,   # [N]
     *,
     step: float,
-    micro_batch: int = 8,
+    micro_batch: int | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One mini-batch SGD epoch via the best available backend."""
-    info = {"dtype": jnp.result_type(X).name, "n": X.shape[0], "d": X.shape[1]}
+    """One mini-batch SGD epoch via the best available backend.
+
+    ``micro_batch=None`` consults the autotuner cache for this
+    (backend, device, shape-class) before falling back to
+    ``DEFAULT_MICRO_BATCH``.
+    """
+    n, d = X.shape
+    info = {"dtype": jnp.result_type(X).name, "n": n, "d": d}
+    if micro_batch is None:
+        b0 = common.resolve_backend("glm_sgd", backend=backend,
+                                    interpret=interpret, info=info)
+        run = None
+        if tune.timeable(w, X, y):
+            run = lambda **cfg: common.dispatch(  # noqa: E731
+                "glm_sgd", task, w, X, y, step=step, backend=b0, **cfg)
+        micro_batch = tune.consult("glm_sgd", b0, info, run) \
+            .get("micro_batch", DEFAULT_MICRO_BATCH)
+    info["micro_batch"] = micro_batch
     return common.dispatch(
         "glm_sgd", task, w, X, y, step=step, micro_batch=micro_batch,
         backend=backend, interpret=interpret, info=info,

@@ -14,19 +14,26 @@ def _pull(task, margins, y):
 def glm_sgd_epoch_ref(
     task: str, w: jax.Array, X: jax.Array, y: jax.Array, step: float, batch: int
 ) -> jax.Array:
-    """Sequential mini-batch SGD pass: w -= (step/batch) * sum-grad per batch.
+    """Sequential mini-batch SGD pass: w -= (step/|B|) * sum-grad per batch.
 
-    batch=1 is exact incremental SGD (paper Algorithm 3)."""
-    n, d = X.shape
-    assert n % batch == 0
-    Xb = X.reshape(n // batch, batch, d)
-    yb = y.reshape(n // batch, batch)
+    batch=1 is exact incremental SGD (paper Algorithm 3).  Any ``n`` is
+    accepted: full batches are scanned, and a non-divisible remainder is
+    applied as one final smaller batch (mean-gradient rule, so its scale
+    is ``step/|tail|``).  The Pallas flavors require divisibility and
+    are routed away by the dispatch caps — this oracle is the fallback.
+    """
 
-    def body(w, xy):
-        Xk, yk = xy
+    def update(w, Xk, yk):
         margins = yk * (Xk @ w)
         g = Xk.T @ _pull(task, margins, yk)
-        return w - (step / batch) * g, None
+        return w - (step / Xk.shape[0]) * g
 
-    w_out, _ = jax.lax.scan(body, w, (Xb, yb))
-    return w_out
+    n, d = X.shape
+    n_full = (n // batch) * batch
+    if n_full:
+        Xb = X[:n_full].reshape(n_full // batch, batch, d)
+        yb = y[:n_full].reshape(n_full // batch, batch)
+        w, _ = jax.lax.scan(lambda w, xy: (update(w, *xy), None), w, (Xb, yb))
+    if n_full < n:
+        w = update(w, X[n_full:], y[n_full:])
+    return w

@@ -1,0 +1,1 @@
+from repro.kernels.glm_sgd_sparse.ops import ell_sgd_epoch  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the fused sparse (ELL) incremental-SGD epoch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pull(task, margins, y):
+    if task == "lr":
+        return -y * jax.nn.sigmoid(-margins)
+    return -y * (margins < 1.0).astype(margins.dtype)
+
+
+def ell_sgd_epoch_ref(
+    task: str,
+    w: jax.Array,        # [d]
+    values: jax.Array,   # [N, K]  zero-padded ELL
+    indices: jax.Array,  # [N, K]  int32 (0-padded; padded values are 0)
+    y: jax.Array,        # [N]
+    step: float,
+    batch: int,
+) -> jax.Array:
+    """Sequential mini-batch SGD pass on ELL data (gather + segment-sum).
+
+    batch=1 is exact incremental SGD.  Any ``n`` is accepted: full
+    batches are scanned, a non-divisible remainder is applied as one
+    final smaller batch at ``step/|tail|`` (mean-gradient rule) — the
+    same ragged-tail semantics as the dense ``glm_sgd`` oracle.
+    """
+    d = w.shape[0]
+
+    def update(w, vk, ik, yk):
+        wg = jnp.take(w, ik, axis=0)                 # [B, K]
+        margins = yk * jnp.sum(vk * wg, axis=1)      # [B]
+        pull = _pull(task, margins, yk)
+        contrib = vk * pull[:, None]                 # [B, K]
+        g = jax.ops.segment_sum(
+            contrib.reshape(-1), ik.reshape(-1), num_segments=d
+        )
+        return w - (step / vk.shape[0]) * g
+
+    n, k = values.shape
+    n_full = (n // batch) * batch
+    if n_full:
+        vb = values[:n_full].reshape(n_full // batch, batch, k)
+        ib = indices[:n_full].reshape(n_full // batch, batch, k)
+        yb = y[:n_full].reshape(n_full // batch, batch)
+        w, _ = jax.lax.scan(
+            lambda w, t: (update(w, *t), None), w, (vb, ib, yb)
+        )
+    if n_full < n:
+        w = update(w, values[n_full:], indices[n_full:], y[n_full:])
+    return w

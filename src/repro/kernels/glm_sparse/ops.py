@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import common
+from repro.kernels import common, tune
 from repro.kernels.glm_sparse import kernel as K
 from repro.kernels.glm_sparse import ref as R
 
@@ -84,13 +84,18 @@ def ell_glm_grad(
     indices: jax.Array,  # [N, K] int32
     y: jax.Array,        # [N]
     *,
-    block_rows: int = 8,
-    d_block: int = 512,
+    block_rows: int | None = None,
+    d_block: int | None = None,
     backend: str | None = None,
     interpret: bool | None = None,
     force_path: str | None = None,   # legacy: "pallas" | "xla" | None (auto)
 ) -> jax.Array:
-    """ELL sparse GLM gradient via the best available backend."""
+    """ELL sparse GLM gradient via the best available backend.
+
+    Unpinned ``block_rows``/``d_block`` consult the autotuner cache
+    (:mod:`repro.kernels.tune`); with no cached winner the historical
+    defaults (8, 512) apply.
+    """
     n, d = values.shape[0], w.shape[0]
     if force_path == "xla":
         backend = backend or common.REFERENCE
@@ -104,8 +109,18 @@ def ell_glm_grad(
         backend = common.PALLAS_INTERPRET if interpret else common.PALLAS_TPU
     info = {"dtype": jnp.result_type(values).name, "sparse": True,
             "n": n, "d": d}
+    b = common.resolve_backend("glm_sparse", backend=backend, info=info)
+    if block_rows is None and d_block is None:
+        run = None
+        if tune.timeable(w, values, indices, y):
+            run = lambda **cfg: common.dispatch(  # noqa: E731
+                "glm_sparse", task, w, values, indices, y, backend=b, **cfg)
+        cfg = tune.consult("glm_sparse", b, info, run)
+        block_rows = cfg.get("block_rows")
+        d_block = cfg.get("d_block")
     return common.dispatch(
         "glm_sparse", task, w, values, indices, y,
-        block_rows=block_rows, d_block=d_block,
-        backend=backend, info=info,
+        block_rows=block_rows if block_rows is not None else 8,
+        d_block=d_block if d_block is not None else 512,
+        backend=b, info=info,
     )

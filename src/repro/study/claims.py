@@ -81,9 +81,44 @@ def check_fig14(rows: list[dict]) -> list[str]:
     return bad
 
 
+#: a kernel trajectory point may be this much slower than the committed
+#: same-host/same-device point before the regression gate trips
+KERNEL_REGRESSION_TOL = 0.20
+
+
 def check_bench_kernels(rows: list[dict]) -> list[str]:
-    return [f"kernels: pallas mismatch at n={r['n']} d={r['d']}"
-            for r in rows if not r["pallas_matches_ref"]]
+    """Kernel conformance + wall-time regression gate.
+
+    Each row is one ``BENCH_kernels.json`` trajectory point plus the
+    ephemeral ``baseline_wall_s`` the producer looked up from the
+    committed trajectory (same entry label, same host, same device
+    kind — cross-host timings never gate).  Three failure modes:
+
+    * ``pallas_match is False`` — a Pallas flavor disagreed with the
+      oracle at this shape;
+    * every row ``None`` — no Pallas flavor was checked at all.  (The
+      old predicate computed ``all({})`` per row, so a run that checked
+      nothing validated as green; unchecked rows now carry ``None``
+      and an entirely unchecked run is a violation.)
+    * wall time more than ``KERNEL_REGRESSION_TOL`` above the
+      comparable committed point.
+    """
+    bad = []
+    for r in rows:
+        if r.get("pallas_match") is False:
+            bad.append(f"kernels: pallas mismatch vs oracle at "
+                       f"{r.get('label', r)}")
+        base = r.get("baseline_wall_s")
+        wall = r.get("wall_s")
+        if base and wall and wall > base * (1.0 + KERNEL_REGRESSION_TOL):
+            bad.append(
+                f"kernels: {r.get('label')} regressed "
+                f"{100.0 * (wall / base - 1.0):.0f}% vs committed "
+                f"trajectory ({wall:.3e}s vs {base:.3e}s)")
+    if rows and all(r.get("pallas_match") is None for r in rows):
+        bad.append("kernels: no Pallas flavor was conformance-checked "
+                   "(every trajectory point is unchecked)")
+    return bad
 
 
 def check_fig24(rows: list[dict]) -> list[str]:

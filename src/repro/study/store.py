@@ -110,3 +110,61 @@ class StudyStore:
     def load(path: str | Path) -> dict:
         with open(path) as f:
             return json.load(f)
+
+
+class KernelBenchStore:
+    """``BENCH_kernels.json`` — the kernel-level perf trajectory.
+
+    The study store records *trials* (SGD runs); this sibling records
+    *kernel launches*: one entry per (family, shape, dtype, block-config
+    variant) with the measured wall time, the conformance verdict
+    against the oracle, and the analytic roofline annotation
+    (``repro.roofline.kernels``).  Entries are keyed by a readable label
+    and serialized with the same determinism contract as
+    ``BENCH_study.json``: wall times come from the on-disk timing cache
+    on re-runs, so a warm re-run writes a byte-identical file (CI
+    asserts this).  Host-varying comparisons (the >20% regression gate
+    vs the committed trajectory) stay in the claims layer and never
+    enter the snapshot.
+    """
+
+    def __init__(self, json_path: str | Path = "BENCH_kernels.json", *,
+                 jsonl_path: str | Path | None = None):
+        self.json_path = Path(json_path)
+        self.jsonl_path = Path(jsonl_path) if jsonl_path is not None else None
+        self.entries: dict[str, dict] = {}
+        self._n_cached = 0
+
+    def record_entry(self, label: str, entry: dict, *,
+                     cached: bool = False) -> None:
+        self._n_cached += bool(cached)
+        self.entries[label] = entry
+
+    def snapshot(self) -> dict:
+        """Deterministic view: no timestamps, no cache/run metadata."""
+        return {
+            "schema": SCHEMA_VERSION,
+            "entries": dict(sorted(self.entries.items())),
+        }
+
+    def write(self) -> Path:
+        self.json_path.parent.mkdir(parents=True, exist_ok=True)
+        self.json_path.write_text(
+            json.dumps(self.snapshot(), sort_keys=True, indent=1) + "\n")
+        if self.jsonl_path is not None:
+            self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
+            ts = datetime.datetime.now(datetime.timezone.utc) \
+                         .isoformat(timespec="seconds")
+            with open(self.jsonl_path, "a") as f:
+                f.write(canonical_json({
+                    "ts": ts,
+                    "json_path": str(self.json_path),
+                    "n_entries": len(self.entries),
+                    "n_cached": self._n_cached,
+                }) + "\n")
+        return self.json_path
+
+    @staticmethod
+    def load(path: str | Path) -> dict:
+        with open(path) as f:
+            return json.load(f)

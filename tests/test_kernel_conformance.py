@@ -22,10 +22,13 @@ from repro.kernels.glm_grad import glm_grad
 from repro.kernels.glm_grad.ref import glm_grad_ref
 from repro.kernels.glm_sgd import glm_sgd_epoch
 from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
+from repro.kernels.glm_sgd_sparse import ell_sgd_epoch
+from repro.kernels.glm_sgd_sparse.ref import ell_sgd_epoch_ref
 from repro.kernels.glm_sparse import ell_glm_grad
 from repro.kernels.glm_sparse.ref import ell_glm_grad_ref
 
-FAMILIES = ("flash_attn", "glm_grad", "glm_sgd", "glm_sparse")
+FAMILIES = ("flash_attn", "glm_grad", "glm_sgd", "glm_sgd_sparse",
+            "glm_sparse")
 DTYPES = (jnp.float32, jnp.bfloat16)
 TASKS = ("lr", "svm")
 
@@ -88,6 +91,32 @@ def test_resolve_backend_rejects_unknown():
         common.resolve_backend("glm_grad", backend="cuda")
 
 
+def test_resolve_backend_env_unregistered_name_errors(monkeypatch):
+    """A bad REPRO_KERNEL_BACKEND value fails loudly, not silently."""
+    monkeypatch.setenv(common.ENV_BACKEND, "cuda")
+    with pytest.raises(ValueError, match="not registered"):
+        common.resolve_backend("glm_grad")
+
+
+def test_resolve_backend_forced_tpu_off_tpu_errors():
+    if common.on_tpu():
+        pytest.skip("forcing pallas-tpu is legal on a TPU host")
+    with pytest.raises(RuntimeError, match="needs a TPU host"):
+        common.resolve_backend("glm_grad", backend=common.PALLAS_TPU)
+
+
+def test_resolve_backend_call_site_beats_env_beats_auto(monkeypatch):
+    """Full precedence chain on one kernel: auto -> env -> call site."""
+    monkeypatch.delenv(common.ENV_BACKEND, raising=False)
+    auto = common.resolve_backend("glm_grad")
+    assert auto == common.available_backends("glm_grad")[0]
+    monkeypatch.setenv(common.ENV_BACKEND, common.REFERENCE)
+    assert common.resolve_backend("glm_grad") == common.REFERENCE
+    assert (common.resolve_backend("glm_grad",
+                                   backend=common.PALLAS_INTERPRET)
+            == common.PALLAS_INTERPRET)
+
+
 def test_caps_reject_sparse_calls_on_dense_only_impls():
     dense_only = common.Caps()
     assert dense_only.supports({"dtype": "float32"})
@@ -119,7 +148,7 @@ def test_glm_sparse_legacy_interpret_respects_budget(monkeypatch, ell_data):
     assert seen[-1] == common.PALLAS_INTERPRET
     big_w = jnp.zeros(40_000)  # d > _MAX_D_PALLAS
     ell_glm_grad("lr", big_w, values, indices, y, interpret=True)
-    assert seen[-1] is None  # auto: caps route the call to reference
+    assert seen[-1] == common.REFERENCE  # caps route the call to reference
 
 
 def test_caps_route_odd_head_dim_to_reference(attn_data):
@@ -171,6 +200,66 @@ def test_glm_sgd_conformance(backend, dtype, task, mb, glm_data):
     out = glm_sgd_epoch(task, w, X, y, step=0.02, micro_batch=mb,
                         backend=backend)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_glm_sgd_caps_route_ragged_n_to_reference(glm_data):
+    """Auto dispatch falls through to the ragged-tail oracle when
+    micro_batch does not divide n; forcing a Pallas flavor raises."""
+    X, y, w = glm_data(30, 16)  # 30 % 4 != 0
+    info = {"dtype": "float32", "n": 30, "micro_batch": 4}
+    assert common.resolve_backend("glm_sgd", info=info) == common.REFERENCE
+    ref = glm_sgd_epoch_ref("lr", w, X, y, 0.02, 4)
+    out = glm_sgd_epoch("lr", w, X, y, step=0.02, micro_batch=4)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="micro_batch"):
+        glm_sgd_epoch("lr", w, X, y, step=0.02, micro_batch=4,
+                      backend=common.PALLAS_INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# glm_sgd_sparse: fused ELL epoch (gradient + update in one launch)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "backend",
+    common.available_backends("glm_sgd_sparse", info={"sparse": True}))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("task", TASKS)
+@pytest.mark.parametrize("mb", [1, 4])
+def test_glm_sgd_sparse_conformance(backend, dtype, task, mb, ell_data):
+    values, indices, y, w = ell_data(32, 200, 6, dtype)
+    ref = ell_sgd_epoch_ref(task, *_f32(w, values), indices,
+                            y.astype(jnp.float32), 0.05, mb)
+    out = ell_sgd_epoch(task, w, values, indices, y, step=0.05,
+                        micro_batch=mb, backend=backend)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+def test_glm_sgd_sparse_caps_route_ragged_n_to_reference(ell_data):
+    values, indices, y, w = ell_data(30, 200, 6)  # 30 % 8 != 0
+    info = {"dtype": "float32", "sparse": True, "n": 30, "d": 200, "k": 6,
+            "micro_batch": 8}
+    assert (common.resolve_backend("glm_sgd_sparse", info=info)
+            == common.REFERENCE)
+    ref = ell_sgd_epoch_ref("lr", w, values, indices, y, 0.05, 8)
+    out = ell_sgd_epoch("lr", w, values, indices, y, step=0.05, micro_batch=8)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="micro_batch"):
+        ell_sgd_epoch("lr", w, values, indices, y, step=0.05, micro_batch=8,
+                      backend=common.PALLAS_INTERPRET)
+
+
+def test_glm_sgd_sparse_caps_route_over_budget_to_reference():
+    """A one-hot too large for VMEM routes to the oracle automatically."""
+    from repro.kernels.glm_sgd_sparse.ops import onehot_budget_ok
+
+    assert onehot_budget_ok(d=4096, k=8, micro_batch=16)
+    assert not onehot_budget_ok(d=1_000_000, k=8, micro_batch=16)
+    info = {"dtype": "float32", "sparse": True, "n": 64, "d": 1_000_000,
+            "k": 8, "micro_batch": 16}
+    assert (common.resolve_backend("glm_sgd_sparse", info=info)
+            == common.REFERENCE)
 
 
 # ---------------------------------------------------------------------------
@@ -277,8 +366,10 @@ def test_async_engine_kernel_backend_dense_rejects_ragged_partition(glm_data):
                                                   "d": 128}))
 def test_async_engine_kernel_backend_sparse(backend):
     """Sparse replica epochs route through glm_sparse when the local update
-    is full-partition (glm_sparse is a sum-gradient kernel); any other
-    granularity must refuse rather than silently fall back."""
+    is full-partition (sum-gradient kernel) and through the fused
+    glm_sgd_sparse epoch for mini-batch local updates; a local_batch that
+    does not divide the partition must refuse rather than silently fall
+    back."""
     import jax.numpy as jnp
 
     from repro.core import sgd
@@ -287,17 +378,19 @@ def test_async_engine_kernel_backend_sparse(backend):
     sp = synthetic.make_sparse("sp-async", 64, 128, 5.0, 8, seed=4)
     per = 64 // 4
     prob = ("lr", sp.ell, jnp.asarray(sp.y), 0.05)
-    base = sgd.run(prob, sgd.AsyncLocalSGD(replicas=4, local_batch=per), 3,
-                   sparse_data=True, record_time=False)
-    routed = sgd.run(
-        prob, sgd.AsyncLocalSGD(replicas=4, local_batch=per,
-                                kernel_backend=backend), 3,
-        sparse_data=True, record_time=False)
-    np.testing.assert_allclose(routed.losses, base.losses,
-                               rtol=1e-4, atol=1e-4)
-    with pytest.raises(ValueError, match="full-partition"):
+    for local_batch in (per, 4):
+        base = sgd.run(
+            prob, sgd.AsyncLocalSGD(replicas=4, local_batch=local_batch), 3,
+            sparse_data=True, record_time=False)
+        routed = sgd.run(
+            prob, sgd.AsyncLocalSGD(replicas=4, local_batch=local_batch,
+                                    kernel_backend=backend), 3,
+            sparse_data=True, record_time=False)
+        np.testing.assert_allclose(routed.losses, base.losses,
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="divide the"):
         sgd.make_epoch_fn(
-            prob, sgd.AsyncLocalSGD(replicas=4, local_batch=1,
+            prob, sgd.AsyncLocalSGD(replicas=4, local_batch=5,
                                     kernel_backend=backend),
             sparse_data=True)
 

@@ -5,14 +5,50 @@ import numpy as np
 import pytest
 
 from repro.data import synthetic
+from repro.kernels import common
 from repro.kernels.glm_grad import glm_grad
 from repro.kernels.glm_grad.ref import glm_grad_ref
 from repro.kernels.glm_sgd import glm_sgd_epoch
 from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
+from repro.kernels.glm_sgd_sparse import ell_sgd_epoch
+from repro.kernels.glm_sgd_sparse.ref import ell_sgd_epoch_ref
 from repro.kernels.glm_sparse import ell_glm_grad
 from repro.kernels.glm_sparse.ref import ell_glm_grad_ref
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.flash_attn.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# pick_block: the block it returns must always be aligned (regression: it
+# used to fall back to ``size`` itself — e.g. pick_block(6, 128, 8) == 6 —
+# handing Pallas a sublane-misaligned block)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("size,preferred,multiple,want", [
+    (128, 128, 8, 128),   # preferred fits exactly
+    (96, 128, 8, 96),     # aligned divisor <= preferred
+    (64, 16, 8, 16),      # largest aligned divisor under preferred
+    (200, 128, 8, 40),    # 200 = 8*25: biggest aligned divisor <= 128 is 40
+    (8, 128, 8, 8),       # minimum aligned size
+    (256, 128, 128, 128),  # lane-multiple constraint
+])
+def test_pick_block_returns_aligned_divisor(size, preferred, multiple, want):
+    got = common.pick_block(size, preferred, multiple)
+    assert got == want
+    assert size % got == 0 and got % multiple == 0
+
+
+@pytest.mark.parametrize("size", [6, 7, 13, 31, 127])  # odd / prime extents
+def test_pick_block_rejects_unalignable_sizes(size):
+    with pytest.raises(ValueError, match="not itself a multiple"):
+        common.pick_block(size, 128, 8)
+
+
+def test_pick_block_whole_extent_fallback_stays_aligned():
+    # no aligned divisor <= preferred, but the extent itself is aligned:
+    # one whole-extent block is the only correct answer
+    assert common.pick_block(40, 4, 8) == 40
 
 
 @pytest.mark.parametrize("task", ["lr", "svm"])
@@ -44,6 +80,20 @@ def test_glm_sparse_kernel(task, n, d, k, rng):
     ref = ell_glm_grad_ref(task, w, ds.ell.values, ds.ell.indices, y)
     out = ell_glm_grad(task, w, ds.ell.values, ds.ell.indices, y,
                        block_rows=8, d_block=256, force_path="pallas")
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("task", ["lr", "svm"])
+@pytest.mark.parametrize("mb", [1, 4, 16])
+@pytest.mark.parametrize("n,d,k", [(32, 200, 6), (64, 130, 10)])
+def test_ell_sgd_kernel(task, mb, n, d, k, rng):
+    ds = synthetic.make_sparse("sp-sgd", n, d, k * 0.6, k, seed=int(d))
+    y = jnp.asarray(ds.y)
+    w = jnp.asarray(rng.normal(0, 0.1, d).astype(np.float32))
+    ref = ell_sgd_epoch_ref(task, w, ds.ell.values, ds.ell.indices, y,
+                            0.05, mb)
+    out = ell_sgd_epoch(task, w, ds.ell.values, ds.ell.indices, y,
+                        step=0.05, micro_batch=mb)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
 
 

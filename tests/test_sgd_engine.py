@@ -123,24 +123,24 @@ def test_sync_engine_kernel_backend_matches_xla_path(ds):
                                        rtol=1e-4, atol=1e-4)
 
 
-def test_sync_engine_kernel_backend_sparse_full_batch(ds):
-    """Sparse full-batch SyncSGD routes through glm_sparse; mini-batch has
-    no sparse epoch kernel and must refuse rather than silently fall back."""
+def test_sync_engine_kernel_backend_sparse(ds):
+    """Sparse SyncSGD routes through the registry: full-batch via the
+    glm_sparse sum gradient, mini-batch via the fused glm_sgd_sparse
+    epoch — both reproduce the inline-XLA path."""
     from repro.kernels import common as kcommon
 
     sp = synthetic.make_sparse("sp-engine", 64, 128, 5.0, 8, seed=4)
     prob = ("lr", sp.ell, jnp.asarray(sp.y), 0.05)
-    base = sgd.run(prob, sgd.SyncSGD(), 3, sparse_data=True,
-                   record_time=False)
-    for backend in kcommon.available_backends(
-            "glm_sparse", info={"sparse": True, "n": 64, "d": 128}):
-        res = sgd.run(prob, sgd.SyncSGD(kernel_backend=backend), 3,
-                      sparse_data=True, record_time=False)
-        np.testing.assert_allclose(res.losses, base.losses,
-                                   rtol=1e-4, atol=1e-4)
-    with pytest.raises(ValueError, match="full-batch"):
-        sgd.make_epoch_fn(prob, sgd.SyncSGD(batch=16, kernel_backend="reference"),
-                          sparse_data=True)
+    for batch in (None, 16):
+        base = sgd.run(prob, sgd.SyncSGD(batch=batch), 3, sparse_data=True,
+                       record_time=False)
+        for backend in kcommon.available_backends(
+                "glm_sparse", info={"sparse": True, "n": 64, "d": 128}):
+            res = sgd.run(prob, sgd.SyncSGD(batch=batch,
+                                            kernel_backend=backend), 3,
+                          sparse_data=True, record_time=False)
+            np.testing.assert_allclose(res.losses, base.losses,
+                                       rtol=1e-4, atol=1e-4)
 
 
 def test_access_path_changes_assignment_not_semantics(ds):
