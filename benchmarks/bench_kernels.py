@@ -48,7 +48,7 @@ from repro.roofline import kernels as roofline
 from repro.study.runner import TrialCache
 from repro.study.spec import canonical_json
 from repro.study.store import KernelBenchStore
-from repro.utils.timing import median_time
+from repro.utils.timing import time_stats
 
 #: bump to invalidate every cached wall time (timing protocol changes)
 TIMING_SCHEMA = 1
@@ -229,11 +229,14 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_kernels.json"):
                            "device_kind": device_kind})
             payload = timing_cache.peek(key)
             if payload is None:
-                wall = median_time(lambda: fam.call(**config),
+                stats = time_stats(lambda: fam.call(**config),
                                    warmup=1, iters=5)
-                payload = {"wall_s": wall}
+                # the snapshot commits only the median (deterministic via
+                # the timing cache); dispersion goes to the JSONL sidecar
+                payload = {"wall_s": stats["median"]}
                 timing_cache.put(key, payload)
                 cached = False
+                store.record_event("timing_stats", label=label, **stats)
             else:
                 cached = True
 

@@ -36,6 +36,7 @@ from benchmarks import (bench_kernels, common, fig8_access_path,
                         fig11_model_replication, fig14_data_replication,
                         fig22_sync_vs_async, fig24_scale, table4_sync,
                         table6_optimal, table7_async)
+from repro.obs import trace
 from repro.study import claims
 from repro.study.store import StudyStore
 
@@ -105,12 +106,16 @@ def main(argv=None):
                        jsonl_path=common.RESULTS_DIR / "study_runs.jsonl")
     common.RUNNER.store = store
 
+    if trace.enabled():
+        print(f"tracing -> {trace.current_path()}", flush=True)
+
     results = {}
     t00 = time.time()
     for name in selected:
         t0 = time.time()
         print(f"== {name} ==", flush=True)
-        results[name] = MODULES[name].run(args.profile)
+        with trace.span("bench.module", module=name, profile=args.profile):
+            results[name] = MODULES[name].run(args.profile)
         for row in results[name]:
             print("  " + ", ".join(f"{k}={common.fmt(v)}"
                                    for k, v in row.items()))

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import glm, sparse
+from repro.obs import trace
 
 Array = jax.Array
 
@@ -445,23 +446,29 @@ def run(
     """Run SGD for ``epochs`` passes, recording loss + wall time per pass."""
     import time
 
-    init, epoch_fn, loss_fn, _ = make_epoch_fn(problem, strategy, sparse_data=sparse_data)
+    init, epoch_fn, loss_fn, merges = make_epoch_fn(
+        problem, strategy, sparse_data=sparse_data)
     task = problem[0] if sparse_data else problem.task
 
     state = init
     losses = [float(loss_fn(state))]
     times = []
     # warmup compile outside the timed region
-    state_c = epoch_fn(state)
-    jax.block_until_ready(state_c)
+    with trace.span("engine.compile", strategy=strategy.name, task=task):
+        state_c = epoch_fn(state)
+        jax.block_until_ready(state_c)
     state = state_c
     losses.append(float(loss_fn(state)))
     times.append(float("nan"))  # epoch 1 time includes compile; exclude
-    for _ in range(epochs - 1):
-        t0 = time.perf_counter()
-        state = epoch_fn(state)
-        jax.block_until_ready(state)
-        times.append(time.perf_counter() - t0)
+    for e in range(epochs - 1):
+        # host-level epoch span: for async strategies the epoch body fuses
+        # `merges` replica-merge rounds (merge_replicas runs inside jit)
+        with trace.span("engine.epoch", epoch=e + 1, strategy=strategy.name,
+                        merges=merges):
+            t0 = time.perf_counter()
+            state = epoch_fn(state)
+            jax.block_until_ready(state)
+            times.append(time.perf_counter() - t0)
         losses.append(float(loss_fn(state)))
     # replace the compile-epoch time with the median of the rest
     if len(times) > 1:

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import sparse as sparse_mod
 from repro.data import synthetic
+from repro.obs import metrics, trace
 from repro.data.ingest import cache, libsvm, registry
 from repro.data.ingest.cache import (DownloadDisabledError,  # noqa: F401
                                      IntegrityError)
@@ -91,7 +92,8 @@ def source_path(name: str) -> tuple[Path, str]:
         # via content_hash, and re-hashing a multi-hundred-MB blob per
         # trial would dominate a sweep
         if str(blob) not in _verified:
-            cache.verify(blob, expected=meta.sha256)
+            with trace.span("ingest.verify", dataset=name):
+                cache.verify(blob, expected=meta.sha256)
             _verified.add(str(blob))
         return blob, "full"
     fx = fixture_path(name)
@@ -145,7 +147,11 @@ def _parsed(name: str) -> tuple[sparse_mod.CSRMatrix, np.ndarray]:
     path, _ = source_path(name)
     key = (name, str(path), raw_digest(name))
     if key not in _parse_memo:
-        _parse_memo[key] = libsvm.parse_file(path, d=meta.d)
+        metrics.counter("ingest.parse_memo.miss").inc()
+        with trace.span("ingest.parse", dataset=name):
+            _parse_memo[key] = libsvm.parse_file(path, d=meta.d)
+    else:
+        metrics.counter("ingest.parse_memo.hit").inc()
     return _parse_memo[key]
 
 

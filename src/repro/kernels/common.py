@@ -37,6 +37,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics, trace
+
 LANE = 128      # TPU minor-dim tile (VREG lanes / MXU edge)
 SUBLANE = 8     # fp32 second-minor tile
 
@@ -203,12 +205,28 @@ def resolve_backend(
                 f"backend {forced!r} for {kernel!r} needs a TPU host "
                 f"(jax.default_backend()={jax.default_backend()!r}); "
                 f"available here: {available_backends(kernel)}")
+        metrics.counter(f"kernel.backend.{kernel}.{forced}").inc()
         return forced
 
     info = info or {}
+    skipped: list[tuple[str, str]] = []
     for b in backends_for(kernel):
-        if _host_available(b) and impls[b].caps.supports(info):
-            return b
+        if not _host_available(b):
+            skipped.append((b, "host"))
+            continue
+        if not impls[b].caps.supports(info):
+            skipped.append((b, "caps"))
+            continue
+        # telemetry: which flavor won, and why better-ranked ones lost.
+        # Resolution happens host-side (at jit-trace time for epochs that
+        # embed a kernel), so these count *resolutions*, not launches.
+        metrics.counter(f"kernel.backend.{kernel}.{b}").inc()
+        for sb, reason in skipped:
+            metrics.counter(f"kernel.fallback.{kernel}.{sb}.{reason}").inc()
+        if skipped and trace.enabled():
+            trace.instant("kernel.caps_fallback", kernel=kernel, chosen=b,
+                          skipped=[f"{sb}:{r}" for sb, r in skipped])
+        return b
     raise RuntimeError(
         f"no backend of {kernel!r} accepts call info {info!r}; "
         f"registered: {backends_for(kernel)}")
@@ -224,7 +242,10 @@ def dispatch(
 ):
     """Resolve a backend and invoke the registered implementation."""
     b = resolve_backend(kernel, backend=backend, interpret=interpret, info=info)
-    return _REGISTRY[kernel][b].fn(*args, **kwargs)
+    # host-side dispatch span: under jit this times trace/lowering overhead
+    # (the launch itself is async); outside jit it times the dispatch call
+    with trace.span("kernel.dispatch", kernel=kernel, backend=b):
+        return _REGISTRY[kernel][b].fn(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from typing import Any, Callable
 import jax
 
 from repro.kernels import common
+from repro.obs import metrics, trace
 from repro.utils.timing import median_time
 
 #: bump when record semantics change in a way that invalidates cached winners
@@ -212,7 +213,9 @@ def lookup(kernel: str, backend: str, info: dict, *,
     cache = cache if cache is not None else TuneCache()
     rec = cache.get(cache.key(kernel, backend, info))
     if rec is None or not isinstance(rec.get("config"), dict):
+        metrics.counter(f"kernel.tune_cache.miss.{kernel}").inc()
         return None
+    metrics.counter(f"kernel.tune_cache.hit.{kernel}").inc()
     cfg = {k: v for k, v in rec["config"].items() if k in tunable.params}
     return cfg or None
 
@@ -256,9 +259,12 @@ def tune(
     if not candidates:
         raise ValueError(f"no {kernel!r} candidates for call info {info!r}")
     table = []
-    for cfg in candidates:
-        wall = median_time(lambda c=cfg: run(**c), warmup=warmup, iters=iters)
-        table.append({"config": cfg, "wall_s": wall})
+    with trace.span("kernel.tune", kernel=kernel, backend=backend,
+                    candidates=len(candidates)):
+        for cfg in candidates:
+            wall = median_time(lambda c=cfg: run(**c),
+                               warmup=warmup, iters=iters)
+            table.append({"config": cfg, "wall_s": wall})
     best = min(table, key=lambda r: r["wall_s"])
     rec = {
         "schema": SCHEMA,

@@ -1,0 +1,30 @@
+"""End-to-end telemetry: span tracing, metrics, Perfetto export.
+
+The paper decomposes time-to-convergence into hardware efficiency and
+statistical efficiency; this package decomposes *where the wall clock
+goes* the same way — per phase, per process, per worker — so a claim
+like "the async sweep is merge-bound" is a measurement, not a guess.
+
+Three pieces (each importable on its own, stdlib-only):
+
+* :mod:`repro.obs.trace`   — structured span tracer.  Disabled it costs
+  one ``None`` check per span; ``REPRO_TRACE=1`` turns every process
+  into a JSONL trace-file writer (``$REPRO_TRACE_DIR``, default
+  ``trace/``).  Sweep workers inherit the env and write their own
+  files, tagged by shard id.
+* :mod:`repro.obs.metrics` — process-local counters / gauges /
+  histograms with fixed deterministic bucket edges, snapshotted to a
+  sidecar next to the trace files — never into ``BENCH_*.json``.
+* :mod:`repro.obs.report`  — ``python -m repro.obs.report``: merges one
+  or many trace files into a per-phase time breakdown (self vs
+  children) and a Chrome-trace / Perfetto JSON (``--perfetto out.json``)
+  one can load at https://ui.perfetto.dev; ``--check`` validates the
+  emitted files against the trace-event shape.
+
+Instrumented layers: kernel dispatch (``kernel.*``), the SGD engines
+(``engine.*``), trial execution (``runner.*`` / ``study.*``), dataset
+ingestion (``ingest.*``), the sweep executor and its workers
+(``sweep.*``), and the benchmark driver (``bench.*``).  See
+docs/OBSERVABILITY.md for the span schema and a walkthrough.
+"""
+from repro.obs import export, metrics, trace  # noqa: F401

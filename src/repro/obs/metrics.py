@@ -1,0 +1,177 @@
+"""Process-local metrics registry: counters, gauges, histograms.
+
+Complement to :mod:`repro.obs.trace`: spans answer *where did the time
+go*, metrics answer *how often did things happen* — cache hit ratios,
+backend-fallback counts, queue depths.  The registry is always live
+(an increment is a dict lookup + add under a lock — cheap enough for
+cache-lookup call sites), but it is only ever *persisted* as a sidecar
+file next to the trace files, and **never** into the deterministic
+``BENCH_*.json`` snapshots: metric values are run-dependent by nature.
+
+Histograms use **fixed bucket edges chosen at creation** (default: the
+decades from 1µs to 100s, a wall-clock scale) so two runs — or two
+sweep workers — produce structurally identical, mergeable snapshots;
+edges are part of the snapshot and re-registration with different edges
+is an error rather than a silent reshape.
+
+Sidecar: when tracing is enabled at process exit, the snapshot is
+written to ``<trace dir>/metrics-<tag>-<pid>.json`` (schema-stamped).
+``python -m repro.obs.report`` sums counters across sidecars and
+``--check`` validates their schema.
+"""
+from __future__ import annotations
+
+import atexit
+import bisect
+import json
+import os
+import threading
+from pathlib import Path
+
+from repro.obs import trace
+
+#: bump when the sidecar layout changes incompatibly
+METRICS_SCHEMA = 1
+
+#: default histogram edges: decades of seconds from 1µs to 100s
+DEFAULT_EDGES = tuple(10.0 ** e for e in range(-6, 3))
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with _LOCK:
+            self.value += n
+
+
+class Gauge:
+    """Last-write-wins scalar (queue depth, stack size, ...)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        with _LOCK:
+            self.value = float(v)
+
+
+class Histogram:
+    """Fixed-edge histogram; bucket ``i`` counts values <= ``edges[i]``
+    (the last bucket is the +inf overflow)."""
+
+    __slots__ = ("name", "edges", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, name: str, edges: tuple[float, ...] = DEFAULT_EDGES):
+        if list(edges) != sorted(edges) or len(edges) < 1:
+            raise ValueError(f"histogram edges must be sorted, non-empty: "
+                             f"{edges!r}")
+        self.name = name
+        self.edges = tuple(float(e) for e in edges)
+        self.counts = [0] * (len(edges) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with _LOCK:
+            self.counts[bisect.bisect_left(self.edges, v)] += 1
+            self.count += 1
+            self.sum += v
+            self.min = v if self.min is None else min(self.min, v)
+            self.max = v if self.max is None else max(self.max, v)
+
+
+_LOCK = threading.Lock()
+_REGISTRY: dict[str, Counter | Gauge | Histogram] = {}
+
+
+def _get(name: str, cls, *args):
+    with _LOCK:
+        m = _REGISTRY.get(name)
+        if m is None:
+            m = cls(name, *args)
+            _REGISTRY[name] = m
+    if not isinstance(m, cls):
+        raise TypeError(f"metric {name!r} already registered as "
+                        f"{type(m).__name__}, not {cls.__name__}")
+    return m
+
+
+def counter(name: str) -> Counter:
+    return _get(name, Counter)
+
+
+def gauge(name: str) -> Gauge:
+    return _get(name, Gauge)
+
+
+def histogram(name: str, edges: tuple[float, ...] = DEFAULT_EDGES) -> Histogram:
+    h = _get(name, Histogram, edges)
+    if h.edges != tuple(float(e) for e in edges):
+        raise ValueError(f"histogram {name!r} already registered with edges "
+                         f"{h.edges}, not {edges}")
+    return h
+
+
+def reset() -> None:
+    """Drop every registered metric (tests)."""
+    with _LOCK:
+        _REGISTRY.clear()
+
+
+def snapshot() -> dict:
+    """Deterministically ordered view of every registered metric."""
+    with _LOCK:
+        items = sorted(_REGISTRY.items())
+    out: dict = {"schema": METRICS_SCHEMA, "counters": {}, "gauges": {},
+                 "histograms": {}}
+    for name, m in items:
+        if isinstance(m, Counter):
+            out["counters"][name] = m.value
+        elif isinstance(m, Gauge):
+            out["gauges"][name] = m.value
+        else:
+            out["histograms"][name] = {
+                "edges": list(m.edges), "counts": list(m.counts),
+                "count": m.count, "sum": m.sum, "min": m.min, "max": m.max,
+            }
+    return out
+
+
+def write_sidecar(path: str | Path | None = None) -> Path | None:
+    """Write the snapshot sidecar (explicit path, or the trace dir).
+
+    With no path and tracing disabled this is a no-op returning None —
+    metrics piggyback on the tracing opt-in.
+    """
+    if path is None:
+        root = trace.current_dir()
+        if root is None:
+            return None
+        tag = os.environ.get(trace.ENV_TRACE_TAG) or trace.DEFAULT_TAG
+        path = root / f"metrics-{tag}-{os.getpid()}.json"
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(snapshot(), sort_keys=True, indent=1) + "\n")
+    return path
+
+
+@atexit.register
+def _flush_at_exit() -> None:  # pragma: no cover - exercised via subprocesses
+    try:
+        if _REGISTRY:
+            write_sidecar()
+    except Exception:
+        pass  # never let telemetry turn a clean exit into a traceback

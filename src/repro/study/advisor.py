@@ -291,13 +291,19 @@ def candidate_space(
     replicas: Sequence[int] = (4, 16, 64),
     accesses: Sequence[str] = ("chunk", "round_robin"),
     rep_ks: Sequence[int] = (0, 10),
-    kernel_backends: Sequence[str | None] = (None,),
+    kernel_backends: Sequence[str | None] = (None, "pallas-interpret"),
 ) -> list:
     """Table-6 design space, filtered to what host + dataset can run."""
     out: list = []
     for kb in kernel_backends:
-        if kb is not None and kb not in caps.backends.get("glm_grad", ()):
-            continue
+        if kb is not None:
+            # forcing a backend bypasses the dispatch Caps checks, so the
+            # space must self-limit: kernel-backed sync epochs are dense
+            # glm_grad calls, and interpret-mode sparse is far too slow
+            if not profile.dense:
+                continue
+            if kb not in caps.backends.get("glm_grad", ()):
+                continue
         out.append(sgd.SyncSGD(kernel_backend=kb))
     for r in replicas:
         if r > caps.max_replicas or profile.n < r * 2:

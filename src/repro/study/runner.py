@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import glm, sgd
+from repro.obs import metrics, trace
 from repro.study.spec import DatasetSpec, TrialSpec, canonical_json
 
 
@@ -109,8 +110,10 @@ class TrialCache:
         payload = self.peek(key)
         if payload is None:
             self.misses += 1
+            metrics.counter("study.trial_cache.miss").inc()
         else:
             self.hits += 1
+            metrics.counter("study.trial_cache.hit").inc()
         return payload
 
     def peek(self, key: str) -> dict | None:
@@ -257,9 +260,12 @@ class Runner:
             retries=report.retries, **report.merge.to_dict())
 
     def _run_single(self, t: TrialSpec) -> TrialResult:
-        ds = self.dataset(t.dataset)
-        problem, sparse_data = _problem(ds, t.task, t.step)
-        r = sgd.run(problem, t.strategy, t.epochs, sparse_data=sparse_data)
+        with trace.span("runner.trial", key=t.key, label=t.label,
+                        strategy=t.strategy.name), trace.xprof(t.label):
+            ds = self.dataset(t.dataset)
+            problem, sparse_data = _problem(ds, t.task, t.step)
+            r = sgd.run(problem, t.strategy, t.epochs,
+                        sparse_data=sparse_data)
         return TrialResult(losses=np.asarray(r.losses, dtype=np.float64),
                            epoch_times=np.asarray(r.epoch_times,
                                                   dtype=np.float64),
@@ -275,29 +281,38 @@ class Runner:
         construction — same strategy, same shapes, same program).
         """
         base = group[0]
-        ds = self.dataset(base.dataset)
-        problem, sparse_data = _problem(ds, base.task, base.step)
-        init, epoch_fn, loss_fn, _ = sgd.make_epoch_fn(
-            problem, base.strategy, sparse_data=sparse_data, step_param=True)
         S = len(group)
-        steps = jnp.asarray([t.step for t in group], dtype=jnp.float32)
-        state = jnp.stack([init] * S)
-        epoch_v = jax.jit(jax.vmap(epoch_fn))
-        loss_v = jax.jit(jax.vmap(loss_fn))
+        metrics.histogram("study.stack_size").observe(float(S))
+        with trace.span("runner.stack", size=S, label=base.label,
+                        strategy=base.strategy.name), trace.xprof(base.label):
+            ds = self.dataset(base.dataset)
+            problem, sparse_data = _problem(ds, base.task, base.step)
+            init, epoch_fn, loss_fn, _ = sgd.make_epoch_fn(
+                problem, base.strategy, sparse_data=sparse_data,
+                step_param=True)
+            steps = jnp.asarray([t.step for t in group], dtype=jnp.float32)
+            state = jnp.stack([init] * S)
+            epoch_v = jax.jit(jax.vmap(epoch_fn))
+            loss_v = jax.jit(jax.vmap(loss_fn))
 
-        losses = [np.asarray(loss_v(state), dtype=np.float64)]
-        times: list[float] = []
-        state = epoch_v(state, steps)          # warmup epoch (compiles)
-        jax.block_until_ready(state)
-        losses.append(np.asarray(loss_v(state), dtype=np.float64))
-        times.append(float("nan"))
-        for _ in range(base.epochs - 1):
-            t0 = time.perf_counter()
-            state = epoch_v(state, steps)
-            jax.block_until_ready(state)
-            times.append(time.perf_counter() - t0)
+            losses = [np.asarray(loss_v(state), dtype=np.float64)]
+            times: list[float] = []
+            with trace.span("engine.compile", strategy=base.strategy.name,
+                            stacked=S):
+                state = epoch_v(state, steps)      # warmup epoch (compiles)
+                jax.block_until_ready(state)
             losses.append(np.asarray(loss_v(state), dtype=np.float64))
-        times[0] = float(np.nanmedian(times[1:])) if len(times) > 1 else 0.0
+            times.append(float("nan"))
+            for e in range(base.epochs - 1):
+                with trace.span("engine.epoch", epoch=e + 1,
+                                strategy=base.strategy.name, stacked=S):
+                    t0 = time.perf_counter()
+                    state = epoch_v(state, steps)
+                    jax.block_until_ready(state)
+                    times.append(time.perf_counter() - t0)
+                losses.append(np.asarray(loss_v(state), dtype=np.float64))
+            times[0] = (float(np.nanmedian(times[1:]))
+                        if len(times) > 1 else 0.0)
 
         loss_mat = np.stack(losses, axis=1)              # [S, epochs+1]
         per_trial_times = np.asarray(times) / S          # amortized

@@ -28,6 +28,44 @@ from pathlib import Path
 
 from repro.study.spec import SCHEMA_VERSION, TrialSpec, canonical_json
 
+#: version stamped on every JSONL sidecar *event* line ("schema" field).
+#: Bump when event field semantics change; ``load_events`` refuses lines
+#: stamped newer than this reader, and treats unstamped lines as legacy
+#: (pre-stamping sidecars stay loadable).
+EVENT_SCHEMA = 1
+
+
+def load_events(path: str | Path, *,
+                kinds: tuple[str, ...] | None = None) -> list[dict]:
+    """Read + validate the event lines of a JSONL sidecar.
+
+    Returns only *event* records (lines with an ``"event"`` field —
+    run-summary lines are skipped), optionally filtered to ``kinds``.
+    Raises ``ValueError`` on malformed JSON or an event stamped with a
+    schema newer than :data:`EVENT_SCHEMA`; events with no stamp are
+    accepted as legacy (schema 0).
+    """
+    out: list[dict] = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i}: not JSON ({e})") from None
+            if "event" not in rec:
+                continue        # run-summary line
+            schema = rec.get("schema", 0)
+            if not isinstance(schema, int) or schema > EVENT_SCHEMA:
+                raise ValueError(
+                    f"{path}:{i}: event schema {schema!r} is newer than "
+                    f"this reader ({EVENT_SCHEMA}); upgrade repro.study")
+            if kinds is None or rec["event"] in kinds:
+                out.append(rec)
+    return out
+
 
 class StudyStore:
     """Accumulates trial results and claim verdicts, then writes them."""
@@ -62,9 +100,11 @@ class StudyStore:
         Worker attribution, shard requeues, cache merges — anything
         that varies run-to-run but explains *how* this sweep executed.
         Events are flushed (and cleared) by ``write``, one JSONL line
-        each, before the run-summary line.
+        each, before the run-summary line.  Each line is stamped with
+        :data:`EVENT_SCHEMA` so :func:`load_events` can validate reads.
         """
-        self._events.append({"event": kind, **fields})
+        self._events.append({"event": kind, "schema": EVENT_SCHEMA,
+                             **fields})
 
     def record_claims(self, violations: list[str],
                       checked_modules: list[str]) -> None:
@@ -134,11 +174,19 @@ class KernelBenchStore:
         self.jsonl_path = Path(jsonl_path) if jsonl_path is not None else None
         self.entries: dict[str, dict] = {}
         self._n_cached = 0
+        self._events: list[dict] = []
 
     def record_entry(self, label: str, entry: dict, *,
                      cached: bool = False) -> None:
         self._n_cached += bool(cached)
         self.entries[label] = entry
+
+    def record_event(self, kind: str, **fields) -> None:
+        """Queue a run-varying event (timing dispersion, host notes) for
+        the JSONL sidecar — same contract as ``StudyStore.record_event``:
+        flushed by ``write``, never into the deterministic snapshot."""
+        self._events.append({"event": kind, "schema": EVENT_SCHEMA,
+                             **fields})
 
     def snapshot(self) -> dict:
         """Deterministic view: no timestamps, no cache/run metadata."""
@@ -155,13 +203,17 @@ class KernelBenchStore:
             self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
             ts = datetime.datetime.now(datetime.timezone.utc) \
                          .isoformat(timespec="seconds")
+            lines = [canonical_json({"ts": ts, **ev}) for ev in self._events]
+            lines.append(canonical_json({
+                "ts": ts,
+                "json_path": str(self.json_path),
+                "n_entries": len(self.entries),
+                "n_cached": self._n_cached,
+                "n_events": len(self._events),
+            }))
             with open(self.jsonl_path, "a") as f:
-                f.write(canonical_json({
-                    "ts": ts,
-                    "json_path": str(self.json_path),
-                    "n_entries": len(self.entries),
-                    "n_cached": self._n_cached,
-                }) + "\n")
+                f.write("".join(line + "\n" for line in lines))
+        self._events = []
         return self.json_path
 
     @staticmethod

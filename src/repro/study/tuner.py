@@ -25,6 +25,7 @@ import dataclasses
 from typing import Sequence
 
 from repro.core import convergence
+from repro.obs import trace
 from repro.study.runner import Runner, TrialResult
 from repro.study.spec import TrialSpec
 
@@ -77,7 +78,9 @@ def tune_many(
     """
     steps = list(steps) if steps is not None else convergence.grid_step_sizes()
     trials = [b.with_step(s) for b in bases for s in steps]
-    results = runner.run(trials)
+    with trace.span("study.tune", bases=len(bases), steps=len(steps),
+                    by=by):
+        results = runner.run(trials)
     out: list[TuneResult] = []
     for i, base in enumerate(bases):
         grid = results[i * len(steps):(i + 1) * len(steps)]

@@ -49,6 +49,7 @@ import time
 from pathlib import Path
 from typing import Sequence
 
+from repro.obs import metrics, trace
 from repro.study.runner import TrialCache
 from repro.study.spec import TrialSpec
 from repro.sweep import plan as plan_mod
@@ -79,6 +80,7 @@ class ShardRun:
     keys: tuple[str, ...]           # what the attempt was asked to run
     completed: tuple[str, ...]      # what landed in its private cache
     requeued: tuple[str, ...]       # what the scheduler re-dispatched
+    trace_file: str | None = None   # the attempt's trace (REPRO_TRACE=1)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -151,12 +153,21 @@ class LocalProcessExecutor:
                "--shard", str(shard_path), "--cache-dir", str(root),
                *(() if stack else ("--no-stack",)),
                *self.worker_args]
+        trace_file = None
+        if trace.enabled():
+            # each attempt gets its own tag → its own trace file, so a
+            # requeued shard shows up as an extra lane in the merged view
+            env = dict(env)
+            env[trace.ENV_TRACE_TAG] = f"shard{shard.worker}a{attempt}"
         log = open(log_path, "w")
         proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
                                 env=env)
+        if trace.enabled():
+            trace_file = str(trace.trace_path(
+                trace.current_dir(), env[trace.ENV_TRACE_TAG], proc.pid))
         return {"shard": shard, "attempt": attempt, "root": root,
                 "proc": proc, "log": log, "log_path": log_path,
-                "t0": time.perf_counter()}
+                "trace_file": trace_file, "t0": time.perf_counter()}
 
     def execute(self, trials: Sequence[TrialSpec], cache: TrialCache, *,
                 stack: bool = True) -> ExecReport:
@@ -175,75 +186,83 @@ class LocalProcessExecutor:
         failures: list[str] = []
         live: list[dict] = []
 
-        try:
-            while queue:
-                live = []
-                for s, a in queue:     # loop, not a comprehension: a launch
-                    live.append(       # failure must not lose live handles
-                        self._launch(s, a, run_dir, env, stack=stack))
-                queue = []
-                # reap every live worker before deciding anything (an
-                # exhausted shard must not orphan its siblings mid-compute),
-                # polling so each worker's wall time is its own exit time,
-                # not the round's slowest — the provenance events attribute
-                # wall time per worker
-                t_exit: dict[int, float] = {}
-                while len(t_exit) < len(live):
-                    progressed = False
+        with trace.span("sweep.execute", workers=self.workers,
+                        shards=len(shards), trials=len(trials)):
+            try:
+                while queue:
+                    live = []
+                    for s, a in queue:  # loop, not a comprehension: a launch
+                        live.append(    # failure must not lose live handles
+                            self._launch(s, a, run_dir, env, stack=stack))
+                    queue = []
+                    # reap every live worker before deciding anything (an
+                    # exhausted shard must not orphan its siblings
+                    # mid-compute), polling so each worker's wall time is
+                    # its own exit time, not the round's slowest — the
+                    # provenance events attribute wall time per worker
+                    t_exit: dict[int, float] = {}
+                    while len(t_exit) < len(live):
+                        progressed = False
+                        for i, item in enumerate(live):
+                            if i not in t_exit \
+                                    and item["proc"].poll() is not None:
+                                t_exit[i] = time.perf_counter()
+                                progressed = True
+                        if not progressed:
+                            time.sleep(0.02)
                     for i, item in enumerate(live):
-                        if i not in t_exit \
-                                and item["proc"].poll() is not None:
-                            t_exit[i] = time.perf_counter()
-                            progressed = True
-                    if not progressed:
-                        time.sleep(0.02)
-                for i, item in enumerate(live):
-                    rc = item["proc"].returncode
-                    item["log"].close()
-                    wall = t_exit[i] - item["t0"]
-                    shard, attempt, root = (item["shard"], item["attempt"],
-                                            item["root"])
-                    roots.append(root)
-                    done = {p.stem for p in cache_entries(root)}
-                    unfinished = tuple(t for t in shard.trials
-                                       if t.key not in done)
-                    requeued: tuple[str, ...] = ()
-                    if rc != 0 and unfinished:
-                        if attempt >= self.max_retries:
-                            failures.append(
-                                f"worker {shard.worker} failed "
-                                f"{attempt + 1}x (exit {rc}), "
-                                f"{len(unfinished)} trial(s) unfinished; "
-                                f"last log lines:\n"
-                                f"{_log_tail(item['log_path'])}")
-                        else:
-                            requeue = plan_mod.Shard(worker=shard.worker,
-                                                     trials=unfinished)
-                            queue.append((requeue, attempt + 1))
-                            requeued = requeue.keys
-                    shard_runs.append(ShardRun(
-                        worker=shard.worker, attempt=attempt, returncode=rc,
-                        wall_s=wall, keys=shard.keys,
-                        completed=tuple(t.key for t in shard.trials
-                                        if t.key in done),
-                        requeued=requeued))
-        finally:
-            # interrupted mid-round (Ctrl-C, launch failure): never leave
-            # worker subprocesses running or log handles open
-            for item in live:
-                if item["proc"].poll() is None:
-                    item["proc"].terminate()
-                    try:
-                        item["proc"].wait(timeout=5)
-                    except subprocess.TimeoutExpired:
-                        item["proc"].kill()
-                        item["proc"].wait()
-                if not item["log"].closed:
-                    item["log"].close()
+                        rc = item["proc"].returncode
+                        item["log"].close()
+                        wall = t_exit[i] - item["t0"]
+                        shard, attempt, root = (item["shard"],
+                                                item["attempt"],
+                                                item["root"])
+                        roots.append(root)
+                        done = {p.stem for p in cache_entries(root)}
+                        unfinished = tuple(t for t in shard.trials
+                                           if t.key not in done)
+                        requeued: tuple[str, ...] = ()
+                        if rc != 0 and unfinished:
+                            if attempt >= self.max_retries:
+                                tf = item["trace_file"]
+                                failures.append(
+                                    f"worker {shard.worker} failed "
+                                    f"{attempt + 1}x (exit {rc}), "
+                                    f"{len(unfinished)} trial(s) unfinished;"
+                                    + (f" trace: {tf};" if tf else "")
+                                    + f" last log lines:\n"
+                                    f"{_log_tail(item['log_path'])}")
+                            else:
+                                requeue = plan_mod.Shard(
+                                    worker=shard.worker, trials=unfinished)
+                                queue.append((requeue, attempt + 1))
+                                requeued = requeue.keys
+                                metrics.counter("sweep.requeue").inc()
+                        shard_runs.append(ShardRun(
+                            worker=shard.worker, attempt=attempt,
+                            returncode=rc, wall_s=wall, keys=shard.keys,
+                            completed=tuple(t.key for t in shard.trials
+                                            if t.key in done),
+                            requeued=requeued,
+                            trace_file=item["trace_file"]))
+            finally:
+                # interrupted mid-round (Ctrl-C, launch failure): never
+                # leave worker subprocesses running or log handles open
+                for item in live:
+                    if item["proc"].poll() is None:
+                        item["proc"].terminate()
+                        try:
+                            item["proc"].wait(timeout=5)
+                        except subprocess.TimeoutExpired:
+                            item["proc"].kill()
+                            item["proc"].wait()
+                    if not item["log"].closed:
+                        item["log"].close()
 
         # merge BEFORE raising: even a failed sweep keeps every completed
         # trial, so the next attempt resumes instead of recomputing
-        merge = merge_caches(roots, cache.root)
+        with trace.span("sweep.merge", roots=len(roots)):
+            merge = merge_caches(roots, cache.root)
         report = ExecReport(executor=self.kind, workers=self.workers,
                             n_trials=len(trials), shard_runs=shard_runs,
                             merge=merge)

@@ -29,6 +29,7 @@ import json
 import sys
 from pathlib import Path
 
+from repro.obs import trace
 from repro.study.runner import Runner
 from repro.sweep.plan import Shard
 
@@ -75,13 +76,20 @@ def main(argv=None) -> int:
 
     done = 0
     total = len(shard.trials)
-    _maybe_fault(done, args.fault_after, args.fault_flag)
-    for group in groups.values():
-        runner.run(group)
-        done += len(group)
-        print(json.dumps({"done": done, "of": total,
-                          "keys": [t.key for t in group]}), flush=True)
+    # the executor sets REPRO_TRACE_TAG=shard<W>a<A> per attempt, so this
+    # span lands in a per-attempt trace file the report CLI stitches into
+    # the driver's timeline
+    with trace.span("sweep.shard", worker=shard.worker, trials=total,
+                    groups=len(groups)):
         _maybe_fault(done, args.fault_after, args.fault_flag)
+        for group in groups.values():
+            with trace.span("sweep.group", stack_key=group[0].stack_key,
+                            trials=len(group)):
+                runner.run(group)
+            done += len(group)
+            print(json.dumps({"done": done, "of": total,
+                              "keys": [t.key for t in group]}), flush=True)
+            _maybe_fault(done, args.fault_after, args.fault_flag)
     return 0
 
 

@@ -24,8 +24,15 @@ def _block(x):
     return jax.block_until_ready(x)
 
 
-def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
-    """Median wall-clock seconds of ``fn(*args)`` with device sync."""
+def time_stats(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+               **kwargs) -> dict:
+    """Timing dispersion of ``fn(*args)`` with device sync.
+
+    Returns ``{"median", "min", "mean", "std", "iters"}`` in wall-clock
+    seconds — the median is what benchmark snapshots commit (robust to
+    one-off stalls); the dispersion fields go to run-varying sidecars
+    so noisy hosts are visible in the perf trajectory.
+    """
     for _ in range(warmup):
         _block(fn(*args, **kwargs))
     times = []
@@ -33,4 +40,16 @@ def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 5, **kwargs) 
         t0 = time.perf_counter()
         _block(fn(*args, **kwargs))
         times.append(time.perf_counter() - t0)
-    return statistics.median(times)
+    return {
+        "median": statistics.median(times),
+        "min": min(times),
+        "mean": statistics.fmean(times),
+        "std": statistics.pstdev(times) if len(times) > 1 else 0.0,
+        "iters": len(times),
+    }
+
+
+def median_time(fn: Callable, *args, warmup: int = 2, iters: int = 5, **kwargs) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` with device sync."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters,
+                      **kwargs)["median"]

@@ -1,0 +1,302 @@
+"""Observability: span tracer, metrics registry, export, report CLI.
+
+The acceptance contract of the subsystem (ISSUE 7):
+* disabled (the default) the tracer is a shared no-op — no files, no
+  jit-lowering drift, bounded overhead on a tight loop;
+* enabled, spans nest, round-trip through the JSONL file, and export to
+  valid Chrome trace-event JSON the report CLI validates;
+* metrics snapshots are deterministic and never enter ``BENCH_*.json``;
+* store JSONL events are schema-stamped and validated on read;
+* a traced 2-worker sweep leaves per-shard trace files that stitch into
+  one timeline with the driver.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sgd
+from repro.obs import export, metrics, report, trace
+from repro.study import spec, store
+from repro.study.runner import Runner
+from repro.sweep import LocalProcessExecutor
+from repro.utils.timing import median_time, time_stats
+
+
+@pytest.fixture
+def traced(tmp_path, monkeypatch):
+    """Enable tracing into a temp dir; restore the disabled state after."""
+    monkeypatch.setenv(trace.ENV_TRACE, "1")
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    monkeypatch.delenv(trace.ENV_TRACE_TAG, raising=False)
+    trace.refresh()
+    metrics.reset()
+    yield tmp_path
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    trace.refresh()
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# disabled fast path
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_is_shared_noop_and_writes_nothing(tmp_path, monkeypatch):
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    trace.refresh()
+    assert not trace.enabled()
+    assert trace.current_path() is None
+    assert trace.span("a.b", x=1) is trace.span("c.d")      # the singleton
+    with trace.span("runner.trial", key="k"):
+        trace.instant("kernel.caps_fallback", chosen="reference")
+    assert list(tmp_path.iterdir()) == []                   # no I/O at all
+
+
+def test_disabled_decorator_returns_function_unchanged():
+    def f(x):
+        return x + 1
+
+    assert trace.span("study.tune")(f) is f
+
+
+def test_disabled_overhead_is_bounded():
+    t0 = time.perf_counter()
+    for _ in range(10_000):
+        with trace.span("engine.epoch", epoch=1):
+            pass
+    assert time.perf_counter() - t0 < 0.5       # generous absolute bound
+
+
+def test_spans_do_not_change_jit_lowering(traced):
+    """Spans are host-side: a jitted body lowers identically whether the
+    call sites are instrumented or not, traced or not."""
+
+    def plain(x):
+        return jnp.tanh(x) * 2.0
+
+    def instrumented(x):
+        with trace.span("kernel.dispatch", kernel="t"):
+            return jnp.tanh(x) * 2.0
+
+    # the module name embeds fn.__name__; align it so the only possible
+    # diff is real lowering drift
+    instrumented.__name__ = "plain"
+
+    x = jnp.ones((8, 8))
+    lowered_plain = jax.jit(plain).lower(x).as_text()
+    assert jax.jit(instrumented).lower(x).as_text() == lowered_plain
+    ft_before = export.read_trace(trace.current_path())
+    assert [s["name"] for s in ft_before.spans] == ["kernel.dispatch"]
+
+
+# ---------------------------------------------------------------------------
+# enabled: round-trip, nesting, export
+# ---------------------------------------------------------------------------
+
+
+def test_span_roundtrip_nesting_and_chrome_export(traced):
+    with trace.span("runner.trial", key="k1", label="t"):
+        with trace.span("engine.epoch", epoch=1):
+            time.sleep(0.002)
+        with trace.span("engine.epoch", epoch=2):
+            pass
+    trace.instant("kernel.caps_fallback", chosen="reference")
+
+    @trace.span("study.tune", bases=1)
+    def tuned():
+        return 41 + 1
+
+    assert tuned() == 42
+
+    ft = export.read_trace(trace.current_path())
+    assert ft.tag == trace.DEFAULT_TAG
+    names = [s["name"] for s in ft.spans]
+    # spans are written at *exit*: children precede their parent
+    assert names == ["engine.epoch", "engine.epoch", "runner.trial",
+                     "study.tune"]
+    by_name = {s["name"]: s for s in ft.spans}
+    assert by_name["runner.trial"]["depth"] == 0
+    assert by_name["engine.epoch"]["depth"] == 1
+    assert by_name["runner.trial"]["args"]["key"] == "k1"
+    assert [i["name"] for i in ft.instants] == ["kernel.caps_fallback"]
+
+    doc = export.to_chrome([ft])
+    assert export.validate_chrome(doc) == []
+    assert export.layers([ft]) == ("engine", "runner", "study")
+    agg = export.breakdown([ft])
+    assert agg["runner.trial"]["count"] == 1
+    assert agg["engine.epoch"]["count"] == 2
+    # the parent's self time excludes its children
+    assert agg["runner.trial"]["self_s"] <= agg["runner.trial"]["total_s"]
+    assert agg["runner.trial"]["total_s"] >= agg["engine.epoch"]["total_s"]
+
+
+def test_span_records_error_and_schema_gate(traced):
+    with pytest.raises(RuntimeError):
+        with trace.span("sweep.execute"):
+            raise RuntimeError("boom")
+    ft = export.read_trace(trace.current_path())
+    assert ft.spans[0]["args"]["error"] == "RuntimeError"
+
+    # a trace stamped newer than the reader refuses to parse
+    newer = traced / "trace-future-1.jsonl"
+    newer.write_text(json.dumps({
+        "kind": "meta", "schema": trace.TRACE_SCHEMA + 1, "pid": 1,
+        "tag": "future", "t0_unix_ns": 0, "t0_perf_ns": 0}) + "\n")
+    with pytest.raises(ValueError, match="newer"):
+        export.read_trace(newer)
+
+
+def test_report_cli_check_and_perfetto(traced, capsys):
+    with trace.span("runner.trial", key="k"):
+        pass
+    out_json = traced / "merged.json"
+    assert report.main([str(traced), "--check"]) == 0
+    assert report.main([str(traced), "--perfetto", str(out_json)]) == 0
+    doc = json.loads(out_json.read_text())
+    assert export.validate_chrome(doc) == []
+    assert any(ev.get("ph") == "X" for ev in doc["traceEvents"])
+    capsys.readouterr()
+    assert report.main([str(traced / "empty-subdir")]) == 1    # nothing there
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_is_deterministic_and_typed():
+    metrics.reset()
+    metrics.counter("b.hits").inc()
+    metrics.counter("a.miss").inc(2)
+    metrics.gauge("q.depth").set(3)
+    h = metrics.histogram("lat")
+    h.observe(5e-6)
+    h.observe(2.0)
+    snap = metrics.snapshot()
+    assert snap["schema"] == metrics.METRICS_SCHEMA
+    assert list(snap["counters"]) == ["a.miss", "b.hits"]    # sorted
+    assert snap["counters"]["a.miss"] == 2
+    assert snap["gauges"]["q.depth"] == 3.0
+    hist = snap["histograms"]["lat"]
+    assert hist["count"] == 2 and hist["min"] == 5e-6 and hist["max"] == 2.0
+    assert len(hist["counts"]) == len(hist["edges"]) + 1
+    assert snap == metrics.snapshot()                        # stable
+
+    with pytest.raises(TypeError, match="already registered"):
+        metrics.gauge("a.miss")
+    with pytest.raises(ValueError, match="edges"):
+        metrics.histogram("lat", edges=(1.0, 2.0))
+    metrics.reset()
+
+
+def test_metrics_sidecar_piggybacks_on_tracing(tmp_path, monkeypatch):
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    trace.refresh()
+    metrics.reset()
+    metrics.counter("x").inc()
+    assert metrics.write_sidecar() is None      # disabled: no default path
+
+    monkeypatch.setenv(trace.ENV_TRACE, "1")
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    trace.refresh()
+    p = metrics.write_sidecar()
+    assert p is not None and p.parent == tmp_path
+    assert json.loads(p.read_text())["counters"]["x"] == 1
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    trace.refresh()
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# store event schema (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_store_events_are_schema_stamped_and_validated(tmp_path):
+    st = store.StudyStore(tmp_path / "out.json",
+                          jsonl_path=tmp_path / "runs.jsonl")
+    st.record_event("sweep_shard", worker=0, returncode=0)
+    st.write()
+    events = store.load_events(tmp_path / "runs.jsonl")
+    assert [e["event"] for e in events] == ["sweep_shard"]
+    assert events[0]["schema"] == store.EVENT_SCHEMA
+    assert store.load_events(tmp_path / "runs.jsonl",
+                             kinds=("sweep_merge",)) == []
+
+    # legacy (pre-stamp) lines load; newer-than-reader lines refuse
+    with open(tmp_path / "runs.jsonl", "a") as f:
+        f.write(json.dumps({"event": "legacy_kind"}) + "\n")
+    assert [e["event"] for e in store.load_events(tmp_path / "runs.jsonl")] \
+        == ["sweep_shard", "legacy_kind"]
+    with open(tmp_path / "runs.jsonl", "a") as f:
+        f.write(json.dumps({"event": "future",
+                            "schema": store.EVENT_SCHEMA + 1}) + "\n")
+    with pytest.raises(ValueError, match="newer"):
+        store.load_events(tmp_path / "runs.jsonl")
+
+
+def test_kernel_bench_store_records_events(tmp_path):
+    st = store.KernelBenchStore(tmp_path / "k.json",
+                                jsonl_path=tmp_path / "k.jsonl")
+    st.record_event("timing_stats", label="x", median=1e-3, std=1e-5)
+    st.record_entry("x", {"wall_s": 1e-3})
+    st.write()
+    # dispersion lands in the sidecar, never the deterministic snapshot
+    assert "timing_stats" not in (tmp_path / "k.json").read_text()
+    [ev] = store.load_events(tmp_path / "k.jsonl")
+    assert ev["event"] == "timing_stats" and ev["std"] == 1e-5
+
+
+# ---------------------------------------------------------------------------
+# timing dispersion (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_time_stats_shape_and_median_consistency():
+    stats = time_stats(lambda: sum(range(50)), warmup=1, iters=5)
+    assert set(stats) == {"median", "min", "mean", "std", "iters"}
+    assert stats["iters"] == 5
+    assert stats["min"] <= stats["median"] <= stats["min"] + stats["std"] * 5 \
+        or stats["median"] >= stats["min"]
+    assert stats["min"] <= stats["mean"]
+    assert median_time(lambda: 1, warmup=0, iters=3) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# traced 2-worker sweep stitches into one timeline
+# ---------------------------------------------------------------------------
+
+
+def test_traced_two_worker_sweep_produces_stitchable_timeline(traced,
+                                                              tmp_path):
+    trials = list(spec.grid(
+        [spec.DatasetSpec(d, max_n=96) for d in ("covtype", "w8a")],
+        ["lr"], [sgd.SyncSGD()], steps=(1e-2, 1e-1), epochs=2))
+    ex = LocalProcessExecutor(workers=2, work_dir=tmp_path / "work")
+    st = store.StudyStore(tmp_path / "out.json",
+                          jsonl_path=tmp_path / "runs.jsonl")
+    Runner(cache_dir=tmp_path / "cache", store=st, executor=ex).run(trials)
+    st.write()
+
+    traces = export.collect([traced])
+    tags = {t.tag for t in traces}
+    assert trace.DEFAULT_TAG in tags                   # the driver
+    assert {"shard0a0", "shard1a0"} <= tags            # one file per worker
+    # the merged view spans driver + worker layers
+    layer_set = set(export.layers(traces))
+    assert {"sweep", "runner", "engine"} <= layer_set
+    doc = export.to_chrome(traces)
+    assert export.validate_chrome(doc) == []
+    assert report.main([str(traced), "--check"]) == 0
+
+    # provenance events carry each attempt's trace file path
+    shard_events = store.load_events(tmp_path / "runs.jsonl",
+                                     kinds=("sweep_shard",))
+    assert {e["worker"] for e in shard_events} == {0, 1}
+    for e in shard_events:
+        assert e["trace_file"] and "shard" in e["trace_file"]
