@@ -32,7 +32,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_kernels, common, fig8_access_path,
+from benchmarks import (bench_kernels, bench_serve, common, fig8_access_path,
                         fig11_model_replication, fig14_data_replication,
                         fig22_sync_vs_async, fig24_scale, table4_sync,
                         table6_optimal, table7_async)
@@ -50,6 +50,7 @@ MODULES = {
     "fig22_sync_vs_async": fig22_sync_vs_async,
     "fig24_scale": fig24_scale,
     "bench_kernels": bench_kernels,
+    "bench_serve": bench_serve,
 }
 
 

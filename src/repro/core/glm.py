@@ -91,6 +91,31 @@ PULLS: dict[str, Callable[[Array, Array], Array]] = {
 }
 
 # ---------------------------------------------------------------------------
+# Inference links (margin -> served score)
+# ---------------------------------------------------------------------------
+# Training consumes margins through the pull functions above; *serving*
+# consumes them through a link: LR responses are calibrated probabilities
+# sigma(x.w), SVM responses are the raw decision value x.w (sign = class,
+# magnitude = distance to the separating hyperplane).  The scoring kernel
+# family (kernels/glm_score) fuses the link into the margin launch, and
+# its oracle is defined against these functions.
+
+
+def lr_link(margins: Array) -> Array:
+    return jax.nn.sigmoid(margins)
+
+
+def svm_link(margins: Array) -> Array:
+    return margins
+
+
+LINKS: dict[str, Callable[[Array], Array]] = {
+    "lr": lr_link,
+    "svm": svm_link,
+}
+
+
+# ---------------------------------------------------------------------------
 # Execution path 1: primitive composition (ViennaCL / TF / BIDMach analogue)
 # ---------------------------------------------------------------------------
 

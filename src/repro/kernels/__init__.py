@@ -22,6 +22,7 @@ from repro.kernels.common import (  # noqa: F401
 )
 from repro.kernels.flash_attn import flash_attention  # noqa: F401
 from repro.kernels.glm_grad import glm_grad  # noqa: F401
+from repro.kernels.glm_score import glm_score  # noqa: F401
 from repro.kernels.glm_sgd import glm_sgd_epoch  # noqa: F401
 from repro.kernels.glm_sgd_sparse import ell_sgd_epoch  # noqa: F401
 from repro.kernels.glm_sparse import ell_glm_grad  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.glm_score.ops import glm_score  # noqa: F401

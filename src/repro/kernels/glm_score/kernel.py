@@ -1,0 +1,86 @@
+"""Fused sparse (ELL) GLM scoring Pallas kernel — inference sibling of
+``glm_sgd_sparse``.
+
+One launch scores a whole padded micro-batch: the model is pinned in
+VMEM across the row-tile grid (BlockSpec index map is constant, so the
+pipeline never re-streams it), and — like every sparse family here —
+the per-row gather ``w[idx]`` lowers to a dense one-hot MXU matmul over
+the full padded feature axis:
+
+    grid step i:  load ELL tile vals_i/idx_i [TB, K]  (HBM->VMEM stream)
+                  onehot  = (idx_i == iota_d)                  [TB*K, d]
+                  margins = rowsum(vals_i * onehot @ w)        (MXU)
+                  out_i   = link(margins)                      (VPU)
+
+The link (LR sigmoid / SVM identity) is fused into the launch, so a
+scoring batch is exactly one kernel — the serving-path analogue of the
+paper's coalesced sparse model access (§5.2.1).  Padded ELL entries
+(value 0 at index 0) contribute 0 to the margin, and padded *rows*
+(admission-queue filler) are entirely zero, so their margin is exactly
+0 and the engine just drops their scores; no masking is needed.  The
+one-hot spans the full padded feature axis, so ops.py budgets
+``TB * K * d_pad`` bytes against VMEM and routes over-budget problems
+to the reference oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+from repro.kernels import common
+
+
+def _link(task, margins):
+    if task == "lr":
+        return jax.nn.sigmoid(margins)
+    return margins
+
+
+def _kernel(task, vals_ref, idx_ref, w_ref, out_ref):
+    vals = vals_ref[...]              # [TB, K]
+    idx = idx_ref[...]                # [TB, K] int32 (global feature ids)
+    tb, kk = vals.shape
+    d_pad = w_ref.shape[0]
+
+    # one-hot [TB*K, d_pad] — the MXU-side gather operand
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (tb * kk, d_pad), 1)
+    onehot = (idx.reshape(tb * kk, 1) == iota_d).astype(jnp.float32)
+
+    w = w_ref[...]                    # [d_pad, 1] (VMEM-pinned)
+    wg = jnp.dot(onehot, w, preferred_element_type=jnp.float32)  # [TB*K, 1]
+    margins = jnp.sum(vals * wg.reshape(tb, kk), axis=1, keepdims=True)
+    out_ref[...] = _link(task, margins)
+
+
+def glm_score_pallas(
+    task: str,
+    w: jax.Array,        # [d_pad, 1]
+    values: jax.Array,   # [N_pad, K]
+    indices: jax.Array,  # [N_pad, K] int32
+    *,
+    block_rows: int,
+    interpret: bool,
+) -> jax.Array:
+    n_pad, kk = values.shape
+    d_pad = w.shape[0]
+    assert n_pad % block_rows == 0, (n_pad, block_rows)
+    grid = (n_pad // block_rows,)
+    body = functools.partial(_kernel, task)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, kk), lambda i: (i, 0)),  # values
+            pl.BlockSpec((block_rows, kk), lambda i: (i, 0)),  # indices
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),        # w (pinned)
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        compiler_params=common.tpu_compiler_params(
+            dimension_semantics=("parallel",),  # rows are independent
+        ),
+        interpret=interpret,
+    )(values, indices, w)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused ELL GLM scoring kernel.
+
+Scoring is the inference half of the paper's sparse access-path story:
+one margin ``m_i = x_i . w`` per request row, pushed through the task's
+link (:data:`repro.core.glm.LINKS` — LR sigmoid probability, SVM raw
+margin).  The oracle is a ``lax.scan`` over rows — the sequential
+semantics every dispatch flavor must match: gather the touched model
+coordinates, dot against the ELL values, link.  Padded ELL entries
+(value 0) contribute exactly zero to the margin by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.glm import LINKS
+
+
+def glm_score_ref(
+    task: str,
+    w: jax.Array,        # [d]
+    values: jax.Array,   # [N, K]  zero-padded ELL
+    indices: jax.Array,  # [N, K]  int32 (0-padded; padded values are 0)
+) -> jax.Array:
+    """Per-row served scores on ELL data (scan oracle, XLA path)."""
+    link = LINKS[task]
+
+    def body(_, row):
+        vals_i, idx_i = row
+        margin = jnp.sum(vals_i * jnp.take(w, idx_i, axis=0))
+        return None, margin
+
+    _, margins = lax.scan(body, None, (values, indices))
+    return link(margins)

@@ -154,6 +154,7 @@ def _attn_candidates(info: dict) -> tuple[dict, ...]:
 
 TUNABLES: dict[str, Tunable] = {
     "glm_grad": Tunable(("block_rows",), _row_block_candidates),
+    "glm_score": Tunable(("block_rows",), _row_block_candidates),
     "glm_sgd": Tunable(("micro_batch",), _micro_batch_candidates),
     "glm_sgd_sparse": Tunable(("micro_batch",), _micro_batch_candidates),
     "glm_sparse": Tunable(("block_rows", "d_block"), _sparse_candidates),

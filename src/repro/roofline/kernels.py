@@ -45,6 +45,10 @@ def kernel_cost(kernel: str, info: dict) -> dict:
         n, d, k = info["n"], info["d"], info["k"]
         flops = 4.0 * n * k
         bytes_ = 2 * f32 * n * k + f32 * n + 2 * f32 * d
+    elif kernel == "glm_score":
+        n, d, k = info["n"], info["d"], info["k"]
+        flops = 2.0 * n * k + n                  # gather-dot + link
+        bytes_ = 2 * f32 * n * k + f32 * n + f32 * d
     elif kernel == "flash_attn":
         b = info["batch"]
         hq, hkv = info["heads_q"], info["heads_kv"]

@@ -68,6 +68,7 @@ class ServeEngine:
         # prefill the prompt token-by-token through the decode path (slot
         # isolation; bulk prefill would use transformer.forward(mode=
         # "prefill") on a dedicated prefill batch in a disaggregated setup)
+        logits = None
         for t, tok in enumerate(req.prompt):
             tokens = jnp.asarray(self.last_tok.reshape(-1, 1))
             tokens = tokens.at[slot, 0].set(int(tok))
@@ -75,8 +76,12 @@ class ServeEngine:
                 self.params, self.cache, tokens, jnp.int32(self.pos[slot]))
             self.pos[slot] += 1
         self.live[slot] = req
-        self.last_tok[slot] = int(jnp.argmax(logits[slot]))
-        req.out.append(int(self.last_tok[slot]))
+        if logits is not None:
+            self.last_tok[slot] = int(jnp.argmax(logits[slot]))
+            req.out.append(int(self.last_tok[slot]))
+        # empty prompt: nothing to prefill, so there is no prompt-conditioned
+        # logit yet — the first token comes from the next tick (the slot
+        # decodes from its current last_tok, 0 at engine start = BOS-like)
         return True
 
     # -- one decode tick for the whole batch --------------------------------
@@ -107,12 +112,10 @@ class ServeEngine:
     def run(self, requests: list[Request], max_ticks: int = 1000):
         """Drive to completion; returns the finished requests."""
         pending = list(requests)
-        done: list[Request] = []
         for _ in range(max_ticks):
             while pending and self.try_admit(pending[0]):
                 pending.pop(0)
             if not pending and all(r is None for r in self.live):
                 break
             self.tick()
-            done.extend(r for r in requests if r.done and r not in done)
         return [r for r in requests if r.done]

@@ -121,6 +121,55 @@ def check_bench_kernels(rows: list[dict]) -> list[str]:
     return bad
 
 
+#: a serve trajectory point's p50 latency may be this much above the
+#: committed same-host/same-device point before the regression gate trips
+#: (request latency includes queueing, noisier than a bare kernel launch)
+SERVE_REGRESSION_TOL = 0.25
+
+
+def check_bench_serve(rows: list[dict]) -> list[str]:
+    """Scoring-service conformance + latency/throughput gate.
+
+    Each row is one ``BENCH_serve.json`` trajectory point plus the
+    ephemeral ``baseline_p50_s`` the producer looked up from the
+    committed trajectory (same entry label, same host, same device
+    kind — cross-host latencies never gate).  Failure modes:
+
+    * ``pallas_match is False`` — a Pallas flavor of ``glm_score``
+      disagreed with the dense oracle at this shape;
+    * every row ``None`` — no Pallas flavor was checked at all (same
+      vacuous-green guard as ``check_bench_kernels``);
+    * non-positive throughput, or p99 below p50 (a broken quantile
+      pipeline, not a slow host);
+    * p50 more than ``SERVE_REGRESSION_TOL`` above the comparable
+      committed point.
+    """
+    bad = []
+    for r in rows:
+        label = r.get("label", r)
+        if r.get("pallas_match") is False:
+            bad.append(f"serve: glm_score pallas mismatch vs oracle at "
+                       f"{label}")
+        rps = r.get("rps")
+        if rps is not None and rps <= 0:
+            bad.append(f"serve: non-positive throughput at {label}")
+        p50, p99 = r.get("p50_s"), r.get("p99_s")
+        if p50 is not None and p99 is not None and p99 < p50:
+            bad.append(f"serve: p99 < p50 at {label} "
+                       f"({p99:.3e}s < {p50:.3e}s)")
+        base = r.get("baseline_p50_s")
+        if base and p50 and p50 > base * (1.0 + SERVE_REGRESSION_TOL):
+            bad.append(
+                f"serve: {label} p50 regressed "
+                f"{100.0 * (p50 / base - 1.0):.0f}% vs committed "
+                f"trajectory ({p50:.3e}s vs {base:.3e}s)")
+    if rows and all(r.get("pallas_match") is None for r in rows):
+        bad.append("serve: no Pallas flavor of glm_score was "
+                   "conformance-checked (every trajectory point is "
+                   "unchecked)")
+    return bad
+
+
 def check_fig24(rows: list[dict]) -> list[str]:
     """Async time/epoch grows (sub-)linearly in N."""
     bad = []
@@ -140,6 +189,7 @@ CHECKS = {
     "fig11_model_replication": check_fig11,
     "fig14_data_replication": check_fig14,
     "bench_kernels": check_bench_kernels,
+    "bench_serve": check_bench_serve,
     "fig24_scale": check_fig24,
 }
 

@@ -152,25 +152,26 @@ class StudyStore:
             return json.load(f)
 
 
-class KernelBenchStore:
-    """``BENCH_kernels.json`` — the kernel-level perf trajectory.
+class TrajectoryStore:
+    """Shared base of the labeled-entry benchmark stores.
 
-    The study store records *trials* (SGD runs); this sibling records
-    *kernel launches*: one entry per (family, shape, dtype, block-config
-    variant) with the measured wall time, the conformance verdict
-    against the oracle, and the analytic roofline annotation
-    (``repro.roofline.kernels``).  Entries are keyed by a readable label
-    and serialized with the same determinism contract as
-    ``BENCH_study.json``: wall times come from the on-disk timing cache
-    on re-runs, so a warm re-run writes a byte-identical file (CI
-    asserts this).  Host-varying comparisons (the >20% regression gate
-    vs the committed trajectory) stay in the claims layer and never
-    enter the snapshot.
+    The study store records *trials* (SGD runs); these siblings record
+    labeled measurement entries — one dict per trajectory point — and
+    serialize them with the same determinism contract as
+    ``BENCH_study.json``: measured values come from an on-disk timing
+    cache on re-runs, so a warm re-run writes a byte-identical file (CI
+    asserts this per store).  Host-varying comparisons (regression
+    gates vs the committed trajectory) stay in the claims layer and
+    never enter the snapshot; run-varying events (timing dispersion,
+    host notes) go to the JSONL sidecar only.
     """
 
-    def __init__(self, json_path: str | Path = "BENCH_kernels.json", *,
+    DEFAULT_PATH = "BENCH.json"
+
+    def __init__(self, json_path: str | Path | None = None, *,
                  jsonl_path: str | Path | None = None):
-        self.json_path = Path(json_path)
+        self.json_path = Path(json_path if json_path is not None
+                              else self.DEFAULT_PATH)
         self.jsonl_path = Path(jsonl_path) if jsonl_path is not None else None
         self.entries: dict[str, dict] = {}
         self._n_cached = 0
@@ -220,3 +221,26 @@ class KernelBenchStore:
     def load(path: str | Path) -> dict:
         with open(path) as f:
             return json.load(f)
+
+
+class KernelBenchStore(TrajectoryStore):
+    """``BENCH_kernels.json`` — the kernel-level perf trajectory.
+
+    One entry per (family, shape, dtype, block-config variant) with the
+    measured wall time, the conformance verdict against the oracle, and
+    the analytic roofline annotation (``repro.roofline.kernels``).
+    """
+
+    DEFAULT_PATH = "BENCH_kernels.json"
+
+
+class ServeBenchStore(TrajectoryStore):
+    """``BENCH_serve.json`` — the serving-layer perf trajectory.
+
+    One entry per (batch size, sparsity) point of the GLM scoring
+    service (``repro.serve.glm``): request-latency quantiles (p50/p99),
+    sustained requests/s, the ``glm_score`` conformance verdict at that
+    shape, and the roofline annotation of one scoring launch.
+    """
+
+    DEFAULT_PATH = "BENCH_serve.json"

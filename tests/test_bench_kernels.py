@@ -86,6 +86,7 @@ def test_kernel_store_snapshot_sorted_and_deterministic(tmp_path):
     ("glm_sgd", {"n": 256, "d": 64}),
     ("glm_sparse", {"n": 256, "d": 512, "k": 8}),
     ("glm_sgd_sparse", {"n": 128, "d": 256, "k": 8}),
+    ("glm_score", {"n": 32, "d": 512, "k": 8}),
     ("flash_attn", {"batch": 1, "heads_q": 2, "heads_kv": 1,
                     "seq_q": 64, "seq_k": 64, "head_dim": 32}),
 ])

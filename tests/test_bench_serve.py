@@ -1,0 +1,129 @@
+"""Tests for the serving trajectory producer, its store, and the gate."""
+import json
+
+from repro.study import claims
+from repro.study.store import ServeBenchStore
+
+
+# ---------------------------------------------------------------------------
+# claims.check_bench_serve: conformance + latency/throughput gate
+# ---------------------------------------------------------------------------
+
+
+def _row(label="serve/lr/d512-k4/batch8", p50=1e-4, p99=2e-4, rps=1e4,
+         match=True, baseline=None):
+    return {"label": label, "p50_s": p50, "p99_s": p99, "rps": rps,
+            "pallas_match": match, "baseline_p50_s": baseline}
+
+
+def test_gate_clean_rows_pass():
+    assert claims.check_bench_serve([_row(), _row(match=None)]) == []
+
+
+def test_gate_flags_oracle_mismatch():
+    bad = claims.check_bench_serve([_row(match=False)])
+    assert len(bad) == 1 and "mismatch" in bad[0]
+
+
+def test_gate_flags_nonpositive_throughput():
+    bad = claims.check_bench_serve([_row(rps=0.0)])
+    assert len(bad) == 1 and "throughput" in bad[0]
+
+
+def test_gate_flags_inverted_quantiles():
+    bad = claims.check_bench_serve([_row(p50=2e-4, p99=1e-4)])
+    assert len(bad) == 1 and "p99 < p50" in bad[0]
+
+
+def test_gate_flags_latency_regression_over_tolerance():
+    tol = claims.SERVE_REGRESSION_TOL
+    ok = _row(p50=1e-4 * (1 + tol) * 0.99, p99=1.0, baseline=1e-4)
+    slow = _row(p50=1e-4 * (1 + tol) * 1.05, p99=1.0, baseline=1e-4)
+    assert claims.check_bench_serve([ok]) == []
+    bad = claims.check_bench_serve([slow])
+    assert len(bad) == 1 and "regressed" in bad[0]
+
+
+def test_gate_ignores_missing_baseline():
+    # cross-host / first-run points have no comparable committed entry
+    assert claims.check_bench_serve([_row(p50=100.0, p99=200.0,
+                                          baseline=None)]) == []
+
+
+def test_gate_rejects_fully_unchecked_run():
+    """Same vacuous-green guard as the kernel gate: a run where no Pallas
+    flavor of glm_score was checked must not validate as green."""
+    rows = [_row(match=None), _row(label="b", match=None)]
+    bad = claims.check_bench_serve(rows)
+    assert len(bad) == 1 and "unchecked" in bad[0]
+    assert claims.check_bench_serve(rows[:1] + [_row()]) == []
+
+
+# ---------------------------------------------------------------------------
+# ServeBenchStore determinism
+# ---------------------------------------------------------------------------
+
+
+def test_serve_store_snapshot_sorted_and_deterministic(tmp_path):
+    s = ServeBenchStore(tmp_path / "BENCH_serve.json",
+                        jsonl_path=tmp_path / "runs.jsonl")
+    s.record_entry("b/label", {"p50_s": 2.0})
+    s.record_entry("a/label", {"p50_s": 1.0}, cached=True)
+    s.record_event("serve_timing", label="a/label", wall_s=0.1)
+    snap = s.snapshot()
+    assert list(snap["entries"]) == ["a/label", "b/label"]
+    assert "ts" not in json.dumps(snap)
+    assert "serve_timing" not in json.dumps(snap)  # events never enter it
+    p = s.write()
+    first = p.read_bytes()
+    s.write()
+    assert p.read_bytes() == first  # snapshot has no run-varying fields
+    assert ServeBenchStore.load(p) == snap
+    # run-variance (events + summary lines) goes to the sidecar only
+    lines = [json.loads(l) for l in (tmp_path / "runs.jsonl").open()]
+    assert len(lines) == 3 and all("ts" in l for l in lines)
+    assert lines[0]["event"] == "serve_timing"
+    assert lines[1]["n_entries"] == 2 and lines[1]["n_cached"] == 1
+
+
+def test_serve_store_default_path_is_committed_trajectory():
+    assert ServeBenchStore().json_path.name == "BENCH_serve.json"
+
+
+# ---------------------------------------------------------------------------
+# Producer end-to-end (micro shapes): trajectory points + reproducibility
+# ---------------------------------------------------------------------------
+
+
+TINY_PROFILES = {
+    "ci": dict(n_requests=24, d=128, batches=(4, 8), ks=(2, 4)),
+}
+
+
+def test_producer_trajectory_and_byte_reproducibility(tmp_path, monkeypatch):
+    from benchmarks import bench_serve, common
+
+    monkeypatch.setattr(bench_serve, "PROFILES", TINY_PROFILES)
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path / "res")
+    out = tmp_path / "BENCH_serve.json"
+
+    rows = bench_serve.run("ci", out_json=str(out))
+    data = json.loads(out.read_text())
+    assert len(data["entries"]) == 4  # 2 batches x 2 sparsities
+    for e in data["entries"].values():
+        assert e["kernel"] == "glm_score"
+        assert e["p50_s"] > 0 and e["p99_s"] >= e["p50_s"] and e["rps"] > 0
+        assert e["pallas_match"] is True  # interpret flavor checked on CPU
+        assert e["checked_backends"]      # at least one non-reference flavor
+        assert e["roofline"]["bound"] in ("compute", "memory")
+        assert {"host", "device_kind", "backend", "engine"} <= set(e)
+    # cold run: committed file absent -> no baselines, gate clean
+    assert all(r["baseline_p50_s"] is None for r in rows)
+    assert claims.check_bench_serve(rows) == []
+
+    first = out.read_bytes()
+    rows2 = bench_serve.run("ci", out_json=str(out))
+    assert out.read_bytes() == first  # warm re-run is byte-identical
+    # warm run gates against the (now committed) same-host trajectory
+    assert all(r["baseline_p50_s"] == r["p50_s"] for r in rows2)
+    assert claims.check_bench_serve(rows2) == []

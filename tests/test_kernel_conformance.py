@@ -24,11 +24,13 @@ from repro.kernels.glm_sgd import glm_sgd_epoch
 from repro.kernels.glm_sgd.ref import glm_sgd_epoch_ref
 from repro.kernels.glm_sgd_sparse import ell_sgd_epoch
 from repro.kernels.glm_sgd_sparse.ref import ell_sgd_epoch_ref
+from repro.kernels.glm_score import glm_score
+from repro.kernels.glm_score.ref import glm_score_ref
 from repro.kernels.glm_sparse import ell_glm_grad
 from repro.kernels.glm_sparse.ref import ell_glm_grad_ref
 
-FAMILIES = ("flash_attn", "glm_grad", "glm_sgd", "glm_sgd_sparse",
-            "glm_sparse")
+FAMILIES = ("flash_attn", "glm_grad", "glm_score", "glm_sgd",
+            "glm_sgd_sparse", "glm_sparse")
 DTYPES = (jnp.float32, jnp.bfloat16)
 TASKS = ("lr", "svm")
 
@@ -276,6 +278,103 @@ def test_glm_sparse_conformance(backend, dtype, task, ell_data):
     out = ell_glm_grad(task, w, values, indices, y, backend=backend,
                        block_rows=8, d_block=128)
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# glm_score: fused ELL scoring (gather-dot + task link, serving path)
+# ---------------------------------------------------------------------------
+
+
+def _dense_scores(task, w, values, indices):
+    """Dense oracle: scatter the ELL rows into a dense X, score X @ w.
+
+    Independent of the lax.scan reference — a shared gather bug in both
+    paths cannot cancel out here.
+    """
+    values = np.asarray(values, np.float32)
+    indices = np.asarray(indices, np.int64)
+    w = np.asarray(w, np.float32)
+    X = np.zeros((values.shape[0], w.shape[0]), np.float32)
+    for i in range(values.shape[0]):
+        np.add.at(X[i], indices[i], values[i])   # duplicates accumulate
+    from repro.core.glm import LINKS
+
+    return np.asarray(LINKS[task](jnp.asarray(X @ w)), np.float32)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    common.available_backends("glm_score", info={"sparse": True}))
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("task", TASKS)
+def test_glm_score_conformance(backend, dtype, task, ell_data):
+    values, indices, _, w = ell_data(48, 384, 8, dtype)
+    ref = _dense_scores(task, *_f32(w, values), indices)
+    out = glm_score(task, w, values, indices, backend=backend, block_rows=8)
+    assert out.dtype == jnp.float32
+    assert out.shape == (48,)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=2e-3)
+    np.testing.assert_allclose(glm_score_ref(task, *_f32(w, values), indices),
+                               ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    common.available_backends("glm_score", info={"sparse": True}))
+def test_glm_score_ragged_rows_conformance(backend, ell_data):
+    """n not divisible by block_rows: filler rows are sliced off."""
+    values, indices, _, w = ell_data(30, 200, 6)
+    ref = _dense_scores("lr", w, values, indices)
+    out = glm_score("lr", w, values, indices, backend=backend, block_rows=8)
+    assert out.shape == (30,)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    common.available_backends("glm_score", info={"sparse": True}))
+def test_glm_score_padding_rows_contribute_exactly_zero(backend):
+    """All-padding ELL rows (value 0, index 0) have margin *exactly* 0.0:
+    SVM scores exactly 0.0, LR exactly sigmoid(0) = 0.5 — bit-exact, not
+    allclose, since the serving engine pads every batch with such rows."""
+    d, k = 256, 4
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 1, d), jnp.float32)  # w[0] != 0
+    values = jnp.zeros((8, k), jnp.float32)
+    values = values.at[0].set(jnp.arange(1.0, k + 1))  # one real row
+    indices = jnp.zeros((8, k), jnp.int32)
+    indices = indices.at[0].set(jnp.arange(1, k + 1))
+    svm = np.asarray(glm_score("svm", w, values, indices, backend=backend,
+                               block_rows=8))
+    lr = np.asarray(glm_score("lr", w, values, indices, backend=backend,
+                              block_rows=8))
+    assert (svm[1:] == 0.0).all(), svm
+    assert (lr[1:] == 0.5).all(), lr
+    assert svm[0] != 0.0 and lr[0] != 0.5  # the real row actually scored
+
+
+def test_glm_score_caps_route_over_budget_to_reference():
+    """A one-hot too large for VMEM routes scoring to the oracle."""
+    from repro.kernels.glm_score.ops import onehot_budget_ok
+
+    assert onehot_budget_ok(d=4096, k=8, block_rows=8)
+    assert not onehot_budget_ok(d=1_000_000, k=8, block_rows=8)
+    info = {"dtype": "float32", "sparse": True, "n": 32, "d": 1_000_000,
+            "k": 8}
+    assert common.resolve_backend("glm_score", info=info) == common.REFERENCE
+    small = dict(info, d=4096)
+    assert common.resolve_backend("glm_score", info=small) != common.REFERENCE
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_glm_score_backends_agree_pairwise(task, ell_data):
+    values, indices, _, w = ell_data(32, 256, 6)
+    outs = [np.asarray(glm_score(task, w, values, indices, backend=b,
+                                 block_rows=8))
+            for b in common.available_backends("glm_score",
+                                               info={"sparse": True})]
+    for other in outs[1:]:
+        np.testing.assert_allclose(outs[0], other, rtol=1e-4, atol=2e-3)
 
 
 # ---------------------------------------------------------------------------
