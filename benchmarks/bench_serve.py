@@ -20,13 +20,18 @@ kind — cross-host latencies never gate — and its baseline lookups stay
 out of the snapshot so the file remains a pure function of the cache.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_serve [ci|paper]
-(exits non-zero on a conformance or regression violation).
+[--consumers N] (exits non-zero on a conformance or regression
+violation).  ``--consumers N`` drives the stream with N dedicated
+consumer threads flushing while the main thread produces; those points
+carry a ``/cN`` label suffix so they never collide with (or gate
+against) the committed single-consumer trajectory.
 """
 from __future__ import annotations
 
 import hashlib
 import platform
 import statistics
+import threading
 import time
 
 import jax.numpy as jnp
@@ -114,6 +119,45 @@ def _drive(engine: GLMScoreEngine, reqs) -> dict:
     }
 
 
+def _drive_threaded(engine: GLMScoreEngine, reqs, consumers: int) -> dict:
+    """``_drive`` with N dedicated consumer threads flushing while the
+    main thread produces — the deployment shape where scoring capacity
+    is scaled independently of admission.  Same stats contract."""
+    responses: list = []
+    resp_lock = threading.Lock()
+    produced = threading.Event()
+
+    def consume():
+        while True:
+            batch = engine.flush()
+            if batch:
+                with resp_lock:
+                    responses.extend(batch)
+            elif produced.is_set() and not len(engine):
+                return
+            else:
+                time.sleep(1e-5)
+
+    threads = [threading.Thread(target=consume) for _ in range(consumers)]
+    with Timer() as t:
+        for th in threads:
+            th.start()
+        try:
+            for r in reqs:
+                engine.submit(r)
+        finally:
+            produced.set()
+            for th in threads:
+                th.join()
+    assert len(responses) == len(reqs), (len(responses), len(reqs))
+    lat = sorted(r.latency_s for r in responses)
+    return {
+        "p50_s": statistics.median(lat),
+        "p99_s": lat[min(len(lat) - 1, int(0.99 * len(lat)))],
+        "rps": len(lat) / max(t.elapsed, 1e-9),
+    }
+
+
 def _baseline_p50(committed: dict | None, label: str, host: str,
                   device_kind: str) -> float | None:
     """The committed trajectory's comparable point (same host + device)."""
@@ -124,7 +168,10 @@ def _baseline_p50(committed: dict | None, label: str, host: str,
     return None
 
 
-def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json"):
+def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json",
+        consumers: int = 1):
+    if consumers < 1:
+        raise ValueError(f"consumers must be >= 1: {consumers}")
     try:
         committed = ServeBenchStore.load(out_json)
     except (FileNotFoundError, ValueError):
@@ -151,18 +198,20 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json"):
 
             engine_cfg = dict(max_batch=batch, queue_depth=2 * batch,
                               flush_deadline_s=0.0)
-            label = f"serve/{TASK}/d{d}-k{k}/batch{batch}"
+            suffix = f"/c{consumers}" if consumers > 1 else ""
+            label = f"serve/{TASK}/d{d}-k{k}/batch{batch}{suffix}"
             key = _digest({"timing_schema": TIMING_SCHEMA, "label": label,
                            "profile": profile, "backend": backend,
-                           "engine": engine_cfg, "host": host,
-                           "device_kind": device_kind})
+                           "engine": engine_cfg, "consumers": consumers,
+                           "host": host, "device_kind": device_kind})
             payload = timing_cache.peek(key)
             if payload is None:
                 engine = GLMScoreEngine(TASK, w, ell_width=k, **engine_cfg)
                 _drive(engine, reqs)        # warmup (jit compile)
                 engine = GLMScoreEngine(TASK, w, ell_width=k, **engine_cfg)
                 t0 = time.perf_counter()
-                payload = _drive(engine, reqs)
+                payload = (_drive(engine, reqs) if consumers == 1 else
+                           _drive_threaded(engine, reqs, consumers))
                 timing_cache.put(key, payload)
                 cached = False
                 store.record_event("serve_timing", label=label,
@@ -179,6 +228,7 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json"):
                 "k": k,
                 "batch": batch,
                 "engine": engine_cfg,
+                "consumers": consumers,
                 "backend": backend,
                 "p50_s": payload["p50_s"],
                 "p99_s": payload["p99_s"],
@@ -201,12 +251,20 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json"):
 
 
 if __name__ == "__main__":
+    import argparse
     import sys
 
     from repro.study import claims
 
-    profile = sys.argv[1] if len(sys.argv) > 1 else "ci"
-    rows = run(profile)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profile", nargs="?", default="ci",
+                    choices=list(PROFILES))
+    ap.add_argument("--consumers", type=int, default=1,
+                    help="dedicated consumer threads flushing the engine "
+                         "while the main thread produces (1 = the classic "
+                         "single-loop driver; >1 points get a /cN label)")
+    args = ap.parse_args()
+    rows = run(args.profile, consumers=args.consumers)
     for r in rows:
         print(f"  {r['label']:36s} p50={1e6 * r['p50_s']:9.1f}us "
               f"p99={1e6 * r['p99_s']:9.1f}us rps={r['rps']:9.0f} "

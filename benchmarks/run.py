@@ -32,10 +32,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_kernels, bench_serve, common, fig8_access_path,
-                        fig11_model_replication, fig14_data_replication,
-                        fig22_sync_vs_async, fig24_scale, table4_sync,
-                        table6_optimal, table7_async)
+from benchmarks import (bench_kernels, bench_live, bench_serve, common,
+                        fig8_access_path, fig11_model_replication,
+                        fig14_data_replication, fig22_sync_vs_async,
+                        fig24_scale, table4_sync, table6_optimal,
+                        table7_async)
 from repro.obs import trace
 from repro.study import claims
 from repro.study.store import StudyStore
@@ -51,6 +52,7 @@ MODULES = {
     "fig24_scale": fig24_scale,
     "bench_kernels": bench_kernels,
     "bench_serve": bench_serve,
+    "bench_live": bench_live,
 }
 
 

@@ -1,0 +1,31 @@
+"""Live training: online async-local SGD that trains while serving.
+
+The continual-learning layer over the repo's three existing pillars —
+the replica-merge SGD engine (:mod:`repro.core.sgd`), the fault/
+staleness gate (:mod:`repro.train.fault`), and the atomic-hot-swap
+scoring engine (:mod:`repro.serve.glm`):
+
+* :mod:`repro.live.stream`  — deterministic seedable minibatch streams
+  (synthetic planted-GLM + replayable chunked libsvm);
+* :mod:`repro.live.learner` — the replica-merge loop with liveness
+  masking, kill/revive, optional int8 error-feedback merge compression,
+  and kernel-dispatch replica passes;
+* :mod:`repro.live.publish` — staleness-bounded snapshot publishing
+  into the scoring engine, step-stamped per snapshot.
+
+See docs/LIVE.md for the architecture and `benchmarks/bench_live.py`
+for the measured convergence-vs-wall-time / latency-under-training
+cells.
+"""
+from repro.live.learner import LiveConfig, LiveLearner
+from repro.live.publish import SnapshotPublisher
+from repro.live.stream import LibsvmStream, StreamBatch, SyntheticStream
+
+__all__ = [
+    "LiveConfig",
+    "LiveLearner",
+    "LibsvmStream",
+    "SnapshotPublisher",
+    "StreamBatch",
+    "SyntheticStream",
+]

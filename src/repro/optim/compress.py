@@ -58,9 +58,11 @@ def compress_tree(tree, error_feedback=None):
         deq = dequantize_leaf(q, s, xe)
         return q, s, xe - deq
 
-    qs = jax.tree.map(lambda x, e: one(x, e)[0], tree, error_feedback)
-    ss = jax.tree.map(lambda x, e: one(x, e)[1], tree, error_feedback)
-    ef = jax.tree.map(lambda x, e: one(x, e)[2], tree, error_feedback)
+    # ONE pass per leaf: map to (q, s, residual) triples, then transpose
+    # the tree-of-triples into three trees
+    triples = jax.tree.map(one, tree, error_feedback)
+    qs, ss, ef = jax.tree.transpose(
+        jax.tree.structure(tree), jax.tree.structure((0, 0, 0)), triples)
     return {"q": qs, "s": ss}, ef
 
 

@@ -51,11 +51,15 @@ from repro.obs import metrics, trace
 @dataclasses.dataclass(frozen=True)
 class ModelSnapshot:
     """One immutable published model.  ``w`` is the [d] weight vector;
-    ``version`` increases by 1 per ``swap_model``."""
+    ``version`` increases by 1 per ``swap_model``.  ``step`` is the
+    producer's progress stamp — a live learner publishes the learner
+    step that produced this model (``repro.live.publish``), so staleness
+    is measurable per snapshot; None for models with no live producer."""
 
     task: str
     w: jax.Array
     version: int
+    step: int | None = None
 
     def __post_init__(self):
         if self.task not in LINKS:
@@ -138,12 +142,14 @@ class GLMScoreEngine:
         """The currently published snapshot (atomic reference read)."""
         return self._model
 
-    def swap_model(self, w, *, task: str | None = None) -> ModelSnapshot:
+    def swap_model(self, w, *, task: str | None = None,
+                   step: int | None = None) -> ModelSnapshot:
         """Atomically publish a new model; returns the new snapshot.
 
         In-flight batches keep scoring against the snapshot they read at
         dequeue time — a flush is consistent with exactly one version,
-        never a mix.
+        never a mix.  ``step`` stamps the producer's progress (the live
+        learner step that trained this model) onto the snapshot.
         """
         with self._lock:
             old = self._model
@@ -153,7 +159,7 @@ class GLMScoreEngine:
                     f"swap_model shape mismatch: serving d={old.w.shape[0]}, "
                     f"got d={w.shape[0]}")
             snap = ModelSnapshot(task if task is not None else old.task,
-                                 w, version=old.version + 1)
+                                 w, version=old.version + 1, step=step)
             self._model = snap
         metrics.counter("serve.model_swaps").inc()
         if trace.enabled():

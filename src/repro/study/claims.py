@@ -170,6 +170,86 @@ def check_bench_serve(rows: list[dict]) -> list[str]:
     return bad
 
 
+#: a live trajectory point's latency/wall-time may be this much above
+#: the committed same-host/same-device point before the gate trips (the
+#: live cells run a learner and a scorer concurrently — noisier than
+#: either alone)
+LIVE_REGRESSION_TOL = 0.35
+
+
+def check_bench_live(rows: list[dict]) -> list[str]:
+    """Live (train-while-serving) convergence + consistency gate.
+
+    Rows are the two ``BENCH_live.json`` cell families plus the
+    ephemeral ``baseline_*`` fields the producer looked up from the
+    committed trajectory (same label/host/device kind — cross-host
+    timings never gate).  Failure modes:
+
+    * a convergence cell whose holdout loss did not drop by at least
+      10% over the run — the online learner is not learning;
+    * a serve-under-training cell whose measured staleness exceeded the
+      publisher's guaranteed bound, whose served versions were not
+      non-decreasing, or that never served a published (post-swap)
+      model — the consistency story is broken, not just slow;
+    * non-positive throughput or p99 < p50 (broken pipeline);
+    * p50 (serve cells) or wall time (convergence cells) more than
+      ``LIVE_REGRESSION_TOL`` above the comparable committed point;
+    * vacuous-green guard: a non-empty row set missing either cell
+      family entirely.
+    """
+    bad = []
+    kinds = {r.get("kind") for r in rows}
+    for r in rows:
+        label = r.get("label", r)
+        if r.get("kind") == "convergence":
+            losses = r.get("losses") or []
+            if len(losses) >= 2 and losses[-1] > 0.9 * losses[0]:
+                bad.append(f"live: no convergence at {label} "
+                           f"(loss {losses[0]:.4g} -> {losses[-1]:.4g})")
+            sps = r.get("steps_per_s")
+            if sps is not None and sps <= 0:
+                bad.append(f"live: non-positive steps/s at {label}")
+            base = r.get("baseline_wall_s")
+            wall = r.get("wall_s")
+            if base and wall and wall > base * (1.0 + LIVE_REGRESSION_TOL):
+                bad.append(
+                    f"live: {label} wall time regressed "
+                    f"{100.0 * (wall / base - 1.0):.0f}% vs committed "
+                    f"trajectory ({wall:.3e}s vs {base:.3e}s)")
+        elif r.get("kind") == "serve":
+            ms = r.get("max_staleness_steps")
+            bound = r.get("staleness_bound_steps")
+            if ms is not None and bound is not None and ms > bound:
+                bad.append(f"live: staleness {ms} exceeded bound {bound} "
+                           f"at {label}")
+            if r.get("versions_monotone") is False:
+                bad.append(f"live: served versions went backwards at "
+                           f"{label}")
+            if not r.get("max_version_served"):
+                bad.append(f"live: never served a published model at "
+                           f"{label}")
+            rps = r.get("rps")
+            if rps is not None and rps <= 0:
+                bad.append(f"live: non-positive throughput at {label}")
+            p50, p99 = r.get("p50_s"), r.get("p99_s")
+            if p50 is not None and p99 is not None and p99 < p50:
+                bad.append(f"live: p99 < p50 at {label} "
+                           f"({p99:.3e}s < {p50:.3e}s)")
+            base = r.get("baseline_p50_s")
+            if base and p50 and p50 > base * (1.0 + LIVE_REGRESSION_TOL):
+                bad.append(
+                    f"live: {label} p50 regressed "
+                    f"{100.0 * (p50 / base - 1.0):.0f}% vs committed "
+                    f"trajectory ({p50:.3e}s vs {base:.3e}s)")
+    if rows and "convergence" not in kinds:
+        bad.append("live: no convergence cells measured "
+                   "(trajectory is serve-only)")
+    if rows and "serve" not in kinds:
+        bad.append("live: no serve-under-training cells measured "
+                   "(trajectory is learner-only)")
+    return bad
+
+
 def check_fig24(rows: list[dict]) -> list[str]:
     """Async time/epoch grows (sub-)linearly in N."""
     bad = []
@@ -190,6 +270,7 @@ CHECKS = {
     "fig14_data_replication": check_fig14,
     "bench_kernels": check_bench_kernels,
     "bench_serve": check_bench_serve,
+    "bench_live": check_bench_live,
     "fig24_scale": check_fig24,
 }
 

@@ -244,3 +244,18 @@ class ServeBenchStore(TrajectoryStore):
     """
 
     DEFAULT_PATH = "BENCH_serve.json"
+
+
+class LiveBenchStore(TrajectoryStore):
+    """``BENCH_live.json`` — the live (train-while-serving) trajectory.
+
+    Two cell families per profile (``benchmarks.bench_live``):
+    convergence-vs-wall-time points of the online replica-merge learner
+    (holdout-loss curve at checkpoints, steps/s, merges) and
+    serve-latency-under-training points (request-latency quantiles and
+    throughput of the scoring engine while the learner trains and
+    publishes concurrently, plus the measured staleness vs the
+    publisher's guaranteed bound).
+    """
+
+    DEFAULT_PATH = "BENCH_live.json"

@@ -38,20 +38,24 @@ from repro.checkpoint import CheckpointManager
 
 @dataclasses.dataclass
 class Heartbeat:
-    """Replica liveness bookkeeping (per pod)."""
+    """Replica liveness bookkeeping (per pod).
+
+    ``clock`` is injectable (monotonic seconds) so staleness tests pin
+    time deterministically instead of sleeping — the same discipline as
+    ``GLMScoreEngine``'s flush-deadline clock."""
 
     n_replicas: int
     timeout_s: float = 300.0
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
-        now = time.monotonic()
-        self.last_seen = np.full(self.n_replicas, now)
+        self.last_seen = np.full(self.n_replicas, self.clock())
 
     def beat(self, replica: int):
-        self.last_seen[replica] = time.monotonic()
+        self.last_seen[replica] = self.clock()
 
     def alive(self) -> np.ndarray:
-        return (time.monotonic() - self.last_seen) < self.timeout_s
+        return (self.clock() - self.last_seen) < self.timeout_s
 
 
 class MergeGate:

@@ -1,0 +1,157 @@
+"""Tests for the live trajectory producer, its store, and the gate."""
+import json
+
+from repro.study import claims
+from repro.study.store import LiveBenchStore
+
+
+# ---------------------------------------------------------------------------
+# claims.check_bench_live: convergence + consistency + regression gate
+# ---------------------------------------------------------------------------
+
+
+def _conv(label="live/lr/d256/r4-m4", losses=(10.0, 5.0), wall=1.0,
+          sps=50.0, baseline=None):
+    return {"label": label, "kind": "convergence", "losses": list(losses),
+            "wall_s": wall, "steps_per_s": sps, "baseline_wall_s": baseline}
+
+
+def _serve(label="live-serve/lr/d256/r4/batch8", p50=1e-4, p99=2e-4,
+           rps=1e3, staleness=3, bound=4, monotone=True, max_v=5,
+           baseline=None):
+    return {"label": label, "kind": "serve", "p50_s": p50, "p99_s": p99,
+            "rps": rps, "max_staleness_steps": staleness,
+            "staleness_bound_steps": bound, "versions_monotone": monotone,
+            "max_version_served": max_v, "baseline_p50_s": baseline}
+
+
+def test_gate_clean_rows_pass():
+    assert claims.check_bench_live([_conv(), _serve()]) == []
+    assert claims.check_bench_live([]) == []
+
+
+def test_gate_flags_no_convergence():
+    bad = claims.check_bench_live([_conv(losses=(10.0, 9.9)), _serve()])
+    assert len(bad) == 1 and "no convergence" in bad[0]
+
+
+def test_gate_flags_staleness_over_bound():
+    bad = claims.check_bench_live([_conv(), _serve(staleness=5, bound=4)])
+    assert len(bad) == 1 and "exceeded bound" in bad[0]
+
+
+def test_gate_flags_version_disorder_and_never_published():
+    bad = claims.check_bench_live([_conv(), _serve(monotone=False)])
+    assert len(bad) == 1 and "backwards" in bad[0]
+    bad = claims.check_bench_live([_conv(), _serve(max_v=0)])
+    assert len(bad) == 1 and "never served" in bad[0]
+
+
+def test_gate_flags_broken_pipeline():
+    bad = claims.check_bench_live([_conv(), _serve(rps=0.0)])
+    assert len(bad) == 1 and "throughput" in bad[0]
+    bad = claims.check_bench_live([_conv(), _serve(p50=2e-4, p99=1e-4)])
+    assert len(bad) == 1 and "p99 < p50" in bad[0]
+
+
+def test_gate_flags_regressions_over_tolerance():
+    tol = claims.LIVE_REGRESSION_TOL
+    ok = [_conv(wall=1.0 * (1 + tol) * 0.99, baseline=1.0),
+          _serve(p50=1e-4 * (1 + tol) * 0.99, p99=1.0, baseline=1e-4)]
+    assert claims.check_bench_live(ok) == []
+    bad = claims.check_bench_live(
+        [_conv(wall=1.0 * (1 + tol) * 1.05, baseline=1.0), _serve()])
+    assert len(bad) == 1 and "wall time regressed" in bad[0]
+    bad = claims.check_bench_live(
+        [_conv(), _serve(p50=1e-4 * (1 + tol) * 1.05, p99=1.0,
+                         baseline=1e-4)])
+    assert len(bad) == 1 and "p50 regressed" in bad[0]
+    # cross-host / first-run points carry no baseline and never gate
+    assert claims.check_bench_live([_conv(wall=99.0), _serve(p50=9.0,
+                                                             p99=9.9)]) == []
+
+
+def test_gate_rejects_missing_cell_family():
+    """Vacuous-green guard: a run measuring only one cell family must
+    not validate as green."""
+    bad = claims.check_bench_live([_conv()])
+    assert len(bad) == 1 and "serve-under-training" in bad[0]
+    bad = claims.check_bench_live([_serve()])
+    assert len(bad) == 1 and "convergence cells" in bad[0]
+
+
+# ---------------------------------------------------------------------------
+# LiveBenchStore
+# ---------------------------------------------------------------------------
+
+
+def test_live_store_snapshot_deterministic(tmp_path):
+    s = LiveBenchStore(tmp_path / "BENCH_live.json",
+                       jsonl_path=tmp_path / "runs.jsonl")
+    s.record_entry("b/label", {"wall_s": 2.0})
+    s.record_entry("a/label", {"wall_s": 1.0}, cached=True)
+    s.record_event("live_timing", label="a/label", cell_s=0.1)
+    snap = s.snapshot()
+    assert list(snap["entries"]) == ["a/label", "b/label"]
+    assert "live_timing" not in json.dumps(snap)  # events stay in sidecar
+    p = s.write()
+    first = p.read_bytes()
+    s.write()
+    assert p.read_bytes() == first
+    assert LiveBenchStore.load(p) == snap
+
+
+def test_live_store_default_path_is_committed_trajectory():
+    assert LiveBenchStore().json_path.name == "BENCH_live.json"
+
+
+# ---------------------------------------------------------------------------
+# Producer end-to-end (micro shapes): trajectory points + reproducibility
+# ---------------------------------------------------------------------------
+
+
+TINY_PROFILES = {
+    "ci": dict(d=64, n_batch=32, n_steps=8, merge_every=2, step_size=0.2,
+               replicas=(2,), compress=(False, True), serve_replicas=2,
+               max_batch=4, n_checkpoints=2),
+}
+
+
+def test_producer_trajectory_and_byte_reproducibility(tmp_path, monkeypatch):
+    from benchmarks import bench_live, common
+
+    monkeypatch.setattr(bench_live, "PROFILES", TINY_PROFILES)
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path / "res")
+    out = tmp_path / "BENCH_live.json"
+
+    rows = bench_live.run("ci", out_json=str(out))
+    data = json.loads(out.read_text())
+    assert len(data["entries"]) == 3   # 1 replica count x 2 compress + serve
+    kinds = {e["kind"] for e in data["entries"].values()}
+    assert kinds == {"convergence", "serve"}
+    for e in data["entries"].values():
+        assert {"host", "device_kind", "task", "n_steps"} <= set(e)
+        if e["kind"] == "convergence":
+            assert len(e["losses"]) == 3          # init + 2 checkpoints
+            assert e["losses"][-1] < e["losses"][0]
+            assert e["merges"] == 4 and e["steps_per_s"] > 0
+        else:
+            assert e["p99_s"] >= e["p50_s"] > 0 and e["rps"] > 0
+            assert e["max_staleness_steps"] <= e["staleness_bound_steps"]
+            assert e["versions_monotone"] is True
+            assert e["max_version_served"] >= 1
+    # cold run: committed file absent -> no baselines, gate clean
+    assert all(r.get("baseline_wall_s") is None
+               and r.get("baseline_p50_s") is None for r in rows)
+    assert claims.check_bench_live(rows) == []
+
+    first = out.read_bytes()
+    rows2 = bench_live.run("ci", out_json=str(out))
+    assert out.read_bytes() == first   # warm re-run is byte-identical
+    # warm run gates against the (now committed) same-host trajectory
+    for r in rows2:
+        if r["kind"] == "convergence":
+            assert r["baseline_wall_s"] == r["wall_s"]
+        else:
+            assert r["baseline_p50_s"] == r["p50_s"]
+    assert claims.check_bench_live(rows2) == []

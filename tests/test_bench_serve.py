@@ -127,3 +127,29 @@ def test_producer_trajectory_and_byte_reproducibility(tmp_path, monkeypatch):
     # warm run gates against the (now committed) same-host trajectory
     assert all(r["baseline_p50_s"] == r["p50_s"] for r in rows2)
     assert claims.check_bench_serve(rows2) == []
+
+
+def test_producer_threaded_consumers_mode(tmp_path, monkeypatch):
+    """--consumers N: the threaded driver loses nothing, reports sane
+    stats, and its points are /cN-labelled so they never gate against
+    the committed single-consumer trajectory."""
+    from benchmarks import bench_serve, common
+
+    monkeypatch.setattr(bench_serve, "PROFILES", {
+        "ci": dict(n_requests=24, d=128, batches=(8,), ks=(4,))})
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path / "res")
+    out = tmp_path / "BENCH_serve.json"
+
+    rows = bench_serve.run("ci", out_json=str(out), consumers=3)
+    assert len(rows) == 1
+    r = rows[0]
+    assert r["label"].endswith("/batch8/c3") and r["consumers"] == 3
+    assert r["p50_s"] > 0 and r["p99_s"] >= r["p50_s"] and r["rps"] > 0
+    assert claims.check_bench_serve(rows) == []
+    # the /cN label namespace is disjoint from the single-consumer one
+    rows1 = bench_serve.run("ci", out_json=str(out), consumers=1)
+    assert rows1[0]["label"] == r["label"][: -len("/c3")]
+    assert rows1[0]["baseline_p50_s"] is None   # no cross-mode gating
+    import pytest as _pytest
+    with _pytest.raises(ValueError, match="consumers"):
+        bench_serve.run("ci", out_json=str(out), consumers=0)

@@ -100,6 +100,51 @@ def test_compression_ratio():
     assert compress.compression_ratio(tree) > 3.0
 
 
+def test_compress_tree_single_pass_per_leaf(monkeypatch, rng):
+    """compress_tree used to evaluate its per-leaf closure three times
+    (one jax.tree.map per output tree); it must quantize each leaf once."""
+    calls = {"n": 0}
+    real = compress.quantize_leaf
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(compress, "quantize_leaf", counting)
+    tree = {"a": jnp.asarray(rng.normal(0, 1, (300,)).astype(np.float32)),
+            "b": {"c": jnp.asarray(rng.normal(0, 1, (5, 7)).astype(np.float32))}}
+    qt, ef = compress.compress_tree(tree)
+    assert calls["n"] == 2                       # exactly one pass per leaf
+    # output trees keep the input structure; round-trip error is bounded
+    assert jax.tree.structure(qt["q"]) == jax.tree.structure(tree)
+    assert jax.tree.structure(qt["s"]) == jax.tree.structure(tree)
+    assert jax.tree.structure(ef) == jax.tree.structure(tree)
+    deq = compress.decompress_tree(qt, tree)
+    for x, r, e in zip(jax.tree.leaves(tree), jax.tree.leaves(deq),
+                       jax.tree.leaves(ef)):
+        np.testing.assert_allclose(np.asarray(x) - np.asarray(r),
+                                   np.asarray(e).reshape(x.shape),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_compress_tree_error_feedback_unbiased_over_steps(rng):
+    """Repeated compression of the same tree with persistent error
+    feedback: the cumulative dequantized sum tracks the true sum (the
+    residual never compounds), i.e. the quantizer is unbiased over time."""
+    x = rng.normal(0, 1, (384,)).astype(np.float32)
+    tree = {"w": jnp.asarray(x)}
+    ef = None
+    total = np.zeros_like(x)
+    for t in range(1, 31):
+        qt, ef = compress.compress_tree(tree, ef)
+        total += np.asarray(compress.decompress_tree(qt, tree)["w"])
+        # bias after t rounds is exactly the residual carried in ef
+        np.testing.assert_allclose(t * x - total, np.asarray(ef["w"]),
+                                   rtol=1e-4, atol=1e-4)
+    scale = np.max(np.abs(x)) / 127.0
+    assert np.max(np.abs(30 * x - total)) <= scale + 1e-5
+
+
 # ---------------------------------------------------------------------------
 # checkpointing
 # ---------------------------------------------------------------------------
@@ -174,6 +219,23 @@ def test_heartbeat_and_merge_gate():
     assert hb.alive()[2] and not hb.alive()[0]
     gate = fault.MergeGate(4, hb)
     assert gate.should_merge(4) and not gate.should_merge(3)
+
+
+def test_heartbeat_injectable_clock_is_deterministic():
+    """Staleness driven by an injected clock — no sleeping, no wall time."""
+    now = [0.0]
+    hb = fault.Heartbeat(3, timeout_s=5.0, clock=lambda: now[0])
+    assert hb.alive().all()                     # all seen at t=0
+    now[0] = 4.99
+    assert hb.alive().all()
+    now[0] = 5.0
+    assert not hb.alive().any()                 # timeout is exclusive
+    hb.beat(1)
+    assert list(hb.alive()) == [False, True, False]
+    gate = fault.MergeGate(2, hb)
+    np.testing.assert_array_equal(gate.alive_mask(), hb.alive())
+    now[0] = 10.1
+    assert not gate.alive_mask().any()
 
 
 def test_elastic_rescale_identity():
