@@ -28,6 +28,17 @@ lookups stay out of the snapshot.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_live [ci|paper]
 (exits non-zero on a convergence, consistency, or regression violation).
+
+``--monitor`` attaches a :class:`repro.obs.monitor.HealthMonitor`:
+convergence cells replay their (cached, deterministic) holdout-loss
+curves through the drift watch, and the serve cell gets a **shadow
+drive** — a separate learner+publisher+engine trio watched end to end
+(staleness, publishes, windowed latency).  Health is sidecar-only; the
+committed ``BENCH_live.json`` stays byte-identical under monitoring.
+``--fault publish-stall`` stalls the shadow publisher after its first
+snapshot (a ``staleness`` breach); ``--fault diverge`` adds a shadow
+learner at 64x the step size whose loss curve blows up (a
+``loss_divergence`` breach).  Faults never touch the measured cells.
 """
 from __future__ import annotations
 
@@ -43,7 +54,8 @@ from benchmarks import common
 from repro.kernels import tune
 from repro.live import (LiveConfig, LiveLearner, SnapshotPublisher,
                         SyntheticStream)
-from repro.obs import trace
+from repro.obs import metrics, trace
+from repro.obs.monitor import DEFAULT_LIVE_SLOS, HealthMonitor
 from repro.serve.glm import GLMScoreEngine, ScoreRequest
 from repro.study.runner import TrialCache
 from repro.study.spec import canonical_json
@@ -163,6 +175,61 @@ def _serve_cell(cfg) -> dict:
     }
 
 
+def _shadow_serve_cell(cfg, mon: HealthMonitor, *,
+                       publish_stall: bool = False) -> None:
+    """Health-only serve drive: a fresh learner/publisher/engine trio is
+    warmed, then watched end to end — per-step staleness, publishes,
+    and windowed request latency all flow into ``mon``.  Single-loop
+    interleave (step, admit, flush) so the drive is deterministic apart
+    from wall time.  ``publish_stall`` freezes the publisher after its
+    first snapshot: merges keep landing but nothing ships, so measured
+    staleness climbs past the bound captured at attach time."""
+    lrn, stream = _learner(cfg, replicas=cfg["serve_replicas"],
+                           compress=False)
+    engine = GLMScoreEngine(TASK, np.zeros(cfg["d"], np.float32),
+                            ell_width=stream.ell_width,
+                            max_batch=cfg["max_batch"],
+                            queue_depth=4 * cfg["max_batch"],
+                            flush_deadline_s=0.0)
+    pub = SnapshotPublisher(engine, every_merges=1).attach(lrn)
+    k = stream.ell_width
+    engine.try_admit(ScoreRequest(-1, np.zeros(k), np.zeros(k, int)))
+    engine.flush()                              # warm the scoring launch
+    lrn.run(2)                                  # warm the step/merge launches
+    mon.watch_live(lrn, pub).attach_engine(engine)
+    rng = np.random.default_rng(1)
+    rid = 0
+    for _ in range(cfg["n_steps"]):
+        lrn.step()
+        if publish_stall and pub.publishes >= 1:
+            pub.every_merges = 10 ** 9          # injected publisher stall
+        for _ in range(2):
+            nn = int(rng.integers(1, k + 1))
+            idx = rng.choice(cfg["d"], nn, replace=False)
+            if engine.try_admit(ScoreRequest(rid, rng.normal(0, 1, nn),
+                                             idx)):
+                rid += 1
+        engine.flush()
+    engine.drain()
+    mon.roll()
+
+
+def _shadow_diverge_cell(cfg, mon: HealthMonitor) -> None:
+    """Health-only divergence driver: the convergence learner at 64x the
+    profile step size, its holdout-loss curve fed to the drift watch.
+    At that step size the logistic loss blows up within a handful of
+    checkpoints — the ``loss_divergence`` fault class."""
+    hot = {**cfg, "step_size": 64.0 * cfg["step_size"]}
+    lrn, stream = _learner(hot, replicas=2, compress=False)
+    ell, y = stream.holdout(256)
+    ckpt = max(1, cfg["merge_every"])
+    for i in range(cfg["n_steps"]):
+        lrn.step()
+        if (i + 1) % ckpt == 0:
+            mon.observe_loss(lrn.loss(ell, y))
+            mon.roll()
+
+
 def _baseline(committed: dict | None, label: str, host: str,
               device_kind: str, field: str) -> float | None:
     """The committed trajectory's comparable point (same host + device)."""
@@ -173,7 +240,18 @@ def _baseline(committed: dict | None, label: str, host: str,
     return None
 
 
-def run(profile: str = "ci", *, out_json: str = "BENCH_live.json"):
+#: injectable fault classes for the monitored shadow cells
+FAULTS = ("publish-stall", "diverge")
+
+
+def run(profile: str = "ci", *, out_json: str = "BENCH_live.json",
+        monitor: bool = False, fault: str | None = None):
+    if fault is not None and fault not in FAULTS:
+        raise ValueError(f"fault must be one of {FAULTS}: {fault!r}")
+    if fault is not None and not monitor:
+        raise ValueError("faults only affect monitored shadow cells; "
+                         "pass monitor=True")
+    mon = HealthMonitor(DEFAULT_LIVE_SLOS) if monitor else None
     try:
         committed = LiveBenchStore.load(out_json)
     except (FileNotFoundError, ValueError):
@@ -224,6 +302,12 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_live.json"):
                 "baseline_wall_s": _baseline(committed, label, host,
                                              device_kind, "wall_s"),
             })
+            if mon is not None:
+                # replay the (deterministic) curve through the drift
+                # watch; one health window per convergence cell
+                for v in entry["losses"]:
+                    mon.observe_loss(v)
+                mon.roll()
 
     label = (f"live-serve/{TASK}/d{cfg['d']}/r{cfg['serve_replicas']}"
              f"/batch{cfg['max_batch']}")
@@ -236,19 +320,44 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_live.json"):
         "baseline_p50_s": _baseline(committed, label, host, device_kind,
                                     "p50_s"),
     })
+    if mon is not None:
+        _shadow_serve_cell(cfg, mon,
+                           publish_stall=(fault == "publish-stall"))
+        if fault == "diverge":
+            _shadow_diverge_cell(cfg, mon)
 
     out = store.write()
     print(f"wrote {out} ({len(rows)} trajectory points)")
+    if mon is not None:
+        print("\nhealth (shadow cells, sidecar-only):")
+        print(mon.table())
+        s = mon.summary()
+        print(f"windows={s['windows']} breaches={s['total_breaches']} "
+              f"{s['breaches'] or ''}")
+        metrics.flush(0)
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
     import sys
 
     from repro.study import claims
 
-    profile = sys.argv[1] if len(sys.argv) > 1 else "ci"
-    rows = run(profile)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profile", nargs="?", default="ci",
+                    choices=list(PROFILES))
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach a HealthMonitor to shadow cells "
+                         "(sidecar-only; BENCH_live.json unchanged)")
+    ap.add_argument("--fault", choices=list(FAULTS), default=None,
+                    help="inject a fault into the monitored shadow cells")
+    ap.add_argument("--out-json", default="BENCH_live.json",
+                    help="trajectory output path (CI fault runs point this "
+                         "at scratch)")
+    args = ap.parse_args()
+    rows = run(args.profile, out_json=args.out_json, monitor=args.monitor,
+               fault=args.fault)
     for r in rows:
         if r["kind"] == "convergence":
             print(f"  {r['label']:34s} loss={r['losses'][0]:8.3f}"

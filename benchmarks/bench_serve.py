@@ -25,6 +25,16 @@ violation).  ``--consumers N`` drives the stream with N dedicated
 consumer threads flushing while the main thread produces; those points
 carry a ``/cN`` label suffix so they never collide with (or gate
 against) the committed single-consumer trajectory.
+
+``--monitor`` attaches a :class:`repro.obs.monitor.HealthMonitor` to a
+**shadow drive** of every cell: the health windows, SLO evaluations,
+and sidecar output come from a separate re-drive of the request stream,
+never from the measured payloads — the cached, committed
+``BENCH_serve.json`` stays byte-identical under monitoring (CI asserts
+the cmp).  ``--fault-stall S`` makes the shadow engines stall every
+flush by S seconds (``GLMScoreEngine(fault_stall_s=...)``) on a
+truncated stream — the injected latency spike the ``monitor-smoke``
+job turns into a ``latency_p99`` breach.
 """
 from __future__ import annotations
 
@@ -43,6 +53,8 @@ from repro.kernels import common as kcommon
 from repro.kernels import tune
 from repro.kernels.glm_score import glm_score
 from repro.kernels.glm_score.ref import glm_score_ref
+from repro.obs import metrics
+from repro.obs.monitor import DEFAULT_SERVE_SLOS, HealthMonitor
 from repro.roofline import kernels as roofline
 from repro.serve.glm import GLMScoreEngine, ScoreRequest
 from repro.study.runner import TrialCache
@@ -158,6 +170,25 @@ def _drive_threaded(engine: GLMScoreEngine, reqs, consumers: int) -> dict:
     }
 
 
+def _shadow_drive(mon: HealthMonitor, w, reqs, k: int, engine_cfg: dict, *,
+                  fault_stall_s: float) -> None:
+    """Health-only re-drive of one cell: a fresh engine is warmed (jit
+    compile stays out of the windows), then monitored and driven; the
+    window closes at the cell boundary.  Nothing here touches the
+    benchmark's measured payloads or the trajectory store.  A nonzero
+    ``fault_stall_s`` truncates the stream to two micro-batches so the
+    injected stall costs ~2 flushes, not the whole stream."""
+    engine = GLMScoreEngine(TASK, w, ell_width=k, **engine_cfg)
+    _drive(engine, reqs)                        # warm the scoring launch
+    if fault_stall_s:
+        reqs = reqs[:2 * engine_cfg["max_batch"]]
+    engine = GLMScoreEngine(TASK, w, ell_width=k,
+                            fault_stall_s=fault_stall_s, **engine_cfg)
+    mon.attach_engine(engine)
+    _drive(engine, reqs)
+    mon.roll()
+
+
 def _baseline_p50(committed: dict | None, label: str, host: str,
                   device_kind: str) -> float | None:
     """The committed trajectory's comparable point (same host + device)."""
@@ -169,9 +200,14 @@ def _baseline_p50(committed: dict | None, label: str, host: str,
 
 
 def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json",
-        consumers: int = 1):
+        consumers: int = 1, monitor: bool = False,
+        fault_stall_s: float = 0.0):
     if consumers < 1:
         raise ValueError(f"consumers must be >= 1: {consumers}")
+    if fault_stall_s and not monitor:
+        raise ValueError("fault_stall_s only affects monitored shadow "
+                         "drives; pass monitor=True")
+    mon = HealthMonitor(DEFAULT_SERVE_SLOS) if monitor else None
     try:
         committed = ServeBenchStore.load(out_json)
     except (FileNotFoundError, ValueError):
@@ -245,8 +281,18 @@ def run(profile: str = "ci", *, out_json: str = "BENCH_serve.json",
                 "baseline_p50_s": _baseline_p50(committed, label, host,
                                                 device_kind),
             })
+            if mon is not None:
+                _shadow_drive(mon, w, reqs, k, engine_cfg,
+                              fault_stall_s=fault_stall_s)
     out = store.write()
     print(f"wrote {out} ({len(rows)} trajectory points)")
+    if mon is not None:
+        print("\nhealth (shadow drives, sidecar-only):")
+        print(mon.table())
+        s = mon.summary()
+        print(f"windows={s['windows']} breaches={s['total_breaches']} "
+              f"{s['breaches'] or ''}")
+        metrics.flush(0)
     return rows
 
 
@@ -263,8 +309,20 @@ if __name__ == "__main__":
                     help="dedicated consumer threads flushing the engine "
                          "while the main thread produces (1 = the classic "
                          "single-loop driver; >1 points get a /cN label)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach a HealthMonitor to shadow drives of every "
+                         "cell (sidecar-only; BENCH_serve.json unchanged)")
+    ap.add_argument("--fault-stall", type=float, default=0.0,
+                    metavar="S", help="monitored shadow engines stall every "
+                                      "flush by S seconds (latency-spike "
+                                      "fault injection)")
+    ap.add_argument("--out-json", default="BENCH_serve.json",
+                    help="trajectory output path (CI fault runs point this "
+                         "at scratch)")
     args = ap.parse_args()
-    rows = run(args.profile, consumers=args.consumers)
+    rows = run(args.profile, out_json=args.out_json,
+               consumers=args.consumers, monitor=args.monitor,
+               fault_stall_s=args.fault_stall)
     for r in rows:
         print(f"  {r['label']:36s} p50={1e6 * r['p50_s']:9.1f}us "
               f"p99={1e6 * r['p99_s']:9.1f}us rps={r['rps']:9.0f} "

@@ -123,6 +123,9 @@ class LiveLearner:
         self.steps = 0
         self.merges = 0
         self.merges_skipped = 0
+        #: optional HealthMonitor (set by monitor.watch_live): each step
+        #: reports published-snapshot staleness; one None check otherwise
+        self.monitor = None
         self._merge_hooks: list[Callable[["LiveLearner"], None]] = []
         self._iter = iter(stream)
         self._epoch = self._build_epoch()
@@ -255,6 +258,8 @@ class LiveLearner:
         metrics.counter("live.steps").inc()
         if self.gate.should_merge(self.steps):
             self.merge()
+        if self.monitor is not None:
+            self.monitor.on_learner_step(self)
         return batch
 
     def merge(self) -> Array | None:

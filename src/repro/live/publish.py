@@ -38,6 +38,9 @@ class SnapshotPublisher:
         self.engine = engine
         self.every_merges = every_merges
         self.publishes = 0
+        #: optional HealthMonitor (set by monitor.watch_live): publishes
+        #: are reported so a stalled publisher is visible as silence
+        self.monitor = None
         #: per-publish audit rows: {"version", "step", "merge"}
         self.history: list[dict] = []
 
@@ -61,6 +64,8 @@ class SnapshotPublisher:
         metrics.counter("live.publishes").inc()
         self.history.append({"version": snap.version, "step": learner.steps,
                              "merge": learner.merges})
+        if self.monitor is not None:
+            self.monitor.on_publish(version=snap.version, step=learner.steps)
         return snap
 
     @property

@@ -15,11 +15,21 @@ Three pieces (each importable on its own, stdlib-only):
 * :mod:`repro.obs.metrics` — process-local counters / gauges /
   histograms with fixed deterministic bucket edges, snapshotted to a
   sidecar next to the trace files — never into ``BENCH_*.json``.
+  ``REPRO_METRICS=1`` persists the sidecar without span tracing;
+  ``metrics.flush()`` is the rate-limited mid-run durability write.
 * :mod:`repro.obs.report`  — ``python -m repro.obs.report``: merges one
   or many trace files into a per-phase time breakdown (self vs
   children) and a Chrome-trace / Perfetto JSON (``--perfetto out.json``)
   one can load at https://ui.perfetto.dev; ``--check`` validates the
-  emitted files against the trace-event shape.
+  emitted files against the trace-event shape; ``--json`` emits the
+  report as data for CI assertions.
+* :mod:`repro.obs.digest` / :mod:`repro.obs.monitor` — the runtime
+  health layer: a bounded fixed-edge streaming quantile sketch, and a
+  :class:`~repro.obs.monitor.HealthMonitor` that folds serve/live
+  telemetry into sliding windows, evaluates declarative ``SLOSpec``
+  predicates on every roll, and emits ``slo.breach`` instants +
+  ``slo.*`` counters.  ``python -m repro.obs.monitor --check`` is the
+  health gate (exit status = breach count).
 
 Instrumented layers: kernel dispatch (``kernel.*``), the SGD engines
 (``engine.*``), trial execution (``runner.*`` / ``study.*``), dataset
@@ -27,4 +37,4 @@ ingestion (``ingest.*``), the sweep executor and its workers
 (``sweep.*``), and the benchmark driver (``bench.*``).  See
 docs/OBSERVABILITY.md for the span schema and a walkthrough.
 """
-from repro.obs import export, metrics, trace  # noqa: F401
+from repro.obs import digest, export, metrics, trace  # noqa: F401

@@ -14,8 +14,17 @@ sweep workers — produce structurally identical, mergeable snapshots;
 edges are part of the snapshot and re-registration with different edges
 is an error rather than a silent reshape.
 
-Sidecar: when tracing is enabled at process exit, the snapshot is
-written to ``<trace dir>/metrics-<tag>-<pid>.json`` (schema-stamped).
+Sidecar: when metrics persistence is enabled (``REPRO_METRICS=1`` on
+its own — monitor mode without span-tracing overhead — or implied by
+``REPRO_TRACE=1``), the snapshot is written to
+``<trace dir>/metrics-<tag>-<pid>.json`` (schema-stamped): once at
+process exit, and *best-effort during the run* via :func:`flush` — a
+rate-limited atomic rewrite (tmp + rename), so the file is always a
+complete, readable snapshot and a SIGKILLed worker or dead replica
+keeps its partial metrics, mirroring ``trace.py``'s closed-span
+durability.  Call sites that mark durability points (the sweep worker
+after every stack group, the health monitor on every window roll) call
+``flush()``; everyone else relies on the ``atexit`` write.
 ``python -m repro.obs.report`` sums counters across sidecars and
 ``--check`` validates their schema.
 """
@@ -26,12 +35,19 @@ import bisect
 import json
 import os
 import threading
+import time
 from pathlib import Path
 
 from repro.obs import trace
 
 #: bump when the sidecar layout changes incompatibly
 METRICS_SCHEMA = 1
+
+ENV_METRICS = "REPRO_METRICS"
+
+#: floor between two best-effort flushes (seconds); keeps hot call
+#: sites from turning the sidecar into an I/O hot loop
+FLUSH_MIN_INTERVAL_S = 0.25
 
 #: default histogram edges: decades of seconds from 1µs to 100s
 DEFAULT_EDGES = tuple(10.0 ** e for e in range(-6, 3))
@@ -150,22 +166,72 @@ def snapshot() -> dict:
     return out
 
 
-def write_sidecar(path: str | Path | None = None) -> Path | None:
-    """Write the snapshot sidecar (explicit path, or the trace dir).
+def enabled() -> bool:
+    """Whether the sidecar is persisted: ``REPRO_METRICS=1`` alone, or
+    implied by tracing.  The registry itself is always live; with both
+    off the only cost anywhere is this env lookup on flush paths (the
+    increment fast path never checks)."""
+    return os.environ.get(ENV_METRICS) == "1" or trace.enabled()
 
-    With no path and tracing disabled this is a no-op returning None —
-    metrics piggyback on the tracing opt-in.
+
+def sidecar_path() -> Path | None:
+    """This process's sidecar file (None when persistence is disabled).
+
+    Tracing pins the directory; metrics-only mode reads the same
+    ``REPRO_TRACE_DIR`` convention so both signals land side by side.
+    """
+    root = trace.current_dir()
+    if root is None:
+        if not enabled():
+            return None
+        root = Path(os.environ.get(trace.ENV_TRACE_DIR)
+                    or trace.DEFAULT_TRACE_DIR)
+    tag = os.environ.get(trace.ENV_TRACE_TAG) or trace.DEFAULT_TAG
+    return root / f"metrics-{tag}-{os.getpid()}.json"
+
+
+def write_sidecar(path: str | Path | None = None) -> Path | None:
+    """Write the snapshot sidecar (explicit path, or the default).
+
+    With no path and persistence disabled this is a no-op returning
+    None.  The write is atomic (tmp + rename): a reader — or a SIGKILL
+    — never sees a half-written file.
     """
     if path is None:
-        root = trace.current_dir()
-        if root is None:
+        path = sidecar_path()
+        if path is None:
             return None
-        tag = os.environ.get(trace.ENV_TRACE_TAG) or trace.DEFAULT_TAG
-        path = root / f"metrics-{tag}-{os.getpid()}.json"
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(snapshot(), sort_keys=True, indent=1) + "\n")
+    tmp = path.with_name(path.name + f".tmp{os.getpid()}")
+    tmp.write_text(json.dumps(snapshot(), sort_keys=True, indent=1) + "\n")
+    os.replace(tmp, path)
     return path
+
+
+_last_flush = 0.0
+
+
+def flush(min_interval_s: float = FLUSH_MIN_INTERVAL_S) -> Path | None:
+    """Best-effort mid-run sidecar write, rate-limited and never raising.
+
+    Returns the path written, or None when persistence is disabled, the
+    floor hasn't elapsed, or the write failed (telemetry must never
+    take the instrumented path down).
+    """
+    global _last_flush
+    if not enabled():
+        return None
+    now = time.monotonic()
+    if min_interval_s > 0 and now - _last_flush < min_interval_s:
+        return None
+    try:
+        p = write_sidecar()
+    except Exception:
+        return None
+    if p is not None:
+        _last_flush = now
+    return p
 
 
 @atexit.register

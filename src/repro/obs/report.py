@@ -9,6 +9,9 @@ timeline — the driver plus every sweep-worker shard attempt.
 
 * default output: a per-phase table (count, total, self, mean) sorted
   by total time, plus the layer list and per-worker file inventory;
+* ``--json``: the same content as one machine-readable JSON document
+  on stdout (files, layers, breakdown, summed counters, instant-event
+  counts) — what CI smoke jobs assert on instead of grepping tables;
 * ``--perfetto OUT.json`` additionally writes the merged Chrome
   trace-event JSON (load at https://ui.perfetto.dev);
 * ``--check`` validates everything instead of (just) reporting: trace
@@ -77,7 +80,7 @@ def _check_metrics(paths) -> list[str]:
     return bad
 
 
-def _print_metrics(paths) -> None:
+def _sum_counters(paths) -> tuple[dict[str, int], list[Path]]:
     sums: dict[str, int] = {}
     files = export.metrics_sidecars(paths)
     for p in files:
@@ -87,10 +90,37 @@ def _print_metrics(paths) -> None:
             continue
         for name, v in snap.get("counters", {}).items():
             sums[name] = sums.get(name, 0) + v
+    return sums, files
+
+
+def _print_metrics(paths) -> None:
+    sums, files = _sum_counters(paths)
     if sums:
         print(f"\ncounters (summed over {len(files)} sidecar(s)):")
         for name in sorted(sums):
             print(f"  {name:48s} {sums[name]:10d}")
+
+
+def _json_doc(traces, paths) -> dict:
+    """Machine-readable report: everything the tables print, as data."""
+    counters, files = _sum_counters(paths)
+    instants: dict[str, int] = {}
+    for t in traces:
+        for rec in t.instants:
+            name = rec.get("name", "?")
+            instants[name] = instants.get(name, 0) + 1
+    return {
+        "files": [{"tag": t.tag, "pid": t.pid, "spans": len(t.spans),
+                   "instants": len(t.instants),
+                   "span_s": sum(s["dur"] for s in t.spans) / 1e9,
+                   "path": str(t.path)} for t in traces],
+        "layers": list(export.layers(traces)),
+        "spans": {name: a for name, a in sorted(export.breakdown(traces)
+                                                .items())},
+        "instants": dict(sorted(instants.items())),
+        "counters": dict(sorted(counters.items())),
+        "metrics_files": [str(p) for p in files],
+    }
 
 
 def main(argv=None) -> int:
@@ -105,6 +135,9 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="validate traces + export + metrics sidecars; "
                          "exit status = number of problems")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as one JSON document on stdout "
+                         "(files, layers, spans, instants, counters)")
     ap.add_argument("--top", type=int, default=24,
                     help="max span names in the breakdown table")
     args = ap.parse_args(argv)
@@ -135,6 +168,12 @@ def main(argv=None) -> int:
             return len(problems)
         print(f"OK: {n_spans} spans across {len(traces)} file(s), "
               f"layers: {', '.join(export.layers(traces))}")
+        return 0
+
+    if args.json:
+        json.dump(_json_doc(traces, paths), sys.stdout, sort_keys=True,
+                  indent=1)
+        print()
         return 0
 
     _print_breakdown(traces, args.top)

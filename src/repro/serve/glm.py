@@ -109,13 +109,23 @@ class GLMScoreEngine:
     clock:
         Injectable monotonic clock (tests pin deadlines without
         sleeping).
+    fault_stall_s:
+        Chaos/CI hook: every flush sleeps this long before scoring —
+        the deadline-stall fault the monitor-smoke job uses to force a
+        latency-SLO breach.  0 (the default) is a plain no-op.
+
+    A :class:`repro.obs.monitor.HealthMonitor` attaches via its
+    ``attach_engine(engine)`` (sets ``self.monitor``); each flush then
+    reports rows, queue depth, fill, and per-request latencies.  With
+    no monitor attached the only cost is one ``None`` check per flush.
     """
 
     def __init__(self, task: str, w, *, ell_width: int,
                  max_batch: int = 32, queue_depth: int = 256,
                  flush_deadline_s: float = 0.005,
                  backend: str | None = None, block_rows: int | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 fault_stall_s: float = 0.0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1: {max_batch}")
         if queue_depth < 1:
@@ -126,8 +136,12 @@ class GLMScoreEngine:
         self.max_batch = max_batch
         self.queue_depth = queue_depth
         self.flush_deadline_s = flush_deadline_s
+        if fault_stall_s < 0:
+            raise ValueError(f"fault_stall_s must be >= 0: {fault_stall_s}")
         self.backend = backend
         self.block_rows = block_rows
+        self.fault_stall_s = fault_stall_s
+        self.monitor = None
         self._clock = clock
         self._lock = threading.Lock()
         #: FIFO of (request, padded values row, padded indices row, t_admit)
@@ -195,10 +209,14 @@ class GLMScoreEngine:
         row = self._pad_row(req)
         with trace.span("serve.admit", rid=req.rid):
             with self._lock:
-                if len(self._queue) >= self.queue_depth:
-                    metrics.counter("serve.rejected").inc()
-                    return False
-                self._queue.append((req, *row, self._clock()))
+                full = len(self._queue) >= self.queue_depth
+                if not full:
+                    self._queue.append((req, *row, self._clock()))
+        if full:
+            metrics.counter("serve.rejected").inc()
+            if self.monitor is not None:
+                self.monitor.on_reject()
+            return False
         metrics.counter("serve.admitted").inc()
         return True
 
@@ -240,6 +258,8 @@ class GLMScoreEngine:
             idx[i] = ix
         with trace.span("serve.batch", rows=n, padded=self.max_batch,
                         version=snap.version):
+            if self.fault_stall_s:
+                time.sleep(self.fault_stall_s)      # injected deadline stall
             with trace.span("serve.score", backend=self.backend or "auto"):
                 scores = glm_score(
                     snap.task, snap.w, jnp.asarray(vals), jnp.asarray(idx),
@@ -249,11 +269,16 @@ class GLMScoreEngine:
         t1 = self._clock()
         metrics.counter("serve.scored").inc(n)
         metrics.counter("serve.batches").inc()
-        return [
+        responses = [
             ScoreResponse(req.rid, float(scores[i]), snap.version,
                           max(0.0, t1 - t_admit))
             for i, (req, _, _, t_admit) in enumerate(entries)
         ]
+        if self.monitor is not None:
+            self.monitor.on_flush(
+                n=n, padded=self.max_batch, queue_depth=len(self._queue),
+                latencies=[r.latency_s for r in responses])
+        return responses
 
     def maybe_flush(self) -> list[ScoreResponse]:
         """Flush only when a batch is *due*: ``max_batch`` rows waiting,

@@ -154,9 +154,10 @@ class LocalProcessExecutor:
                *(() if stack else ("--no-stack",)),
                *self.worker_args]
         trace_file = None
-        if trace.enabled():
-            # each attempt gets its own tag → its own trace file, so a
-            # requeued shard shows up as an extra lane in the merged view
+        if trace.enabled() or metrics.enabled():
+            # each attempt gets its own tag → its own trace/metrics files,
+            # so a requeued shard shows up as an extra lane in the merged
+            # view (metrics-only mode still needs the tag for its sidecar)
             env = dict(env)
             env[trace.ENV_TRACE_TAG] = f"shard{shard.worker}a{attempt}"
         log = open(log_path, "w")

@@ -20,16 +20,22 @@ as a log, not a protocol — the cache directory is the source of truth.
 path: after N completed trials the worker exits with status 17 —
 once, if ``--fault-flag PATH`` names a sentinel file (created on the
 first trip, so the retried shard runs to completion), or on every
-attempt without it (exercises retry exhaustion).
+attempt without it (exercises retry exhaustion).  ``--fault-mode kill``
+makes the fault a real ``SIGKILL`` (no atexit, no cleanup) instead of
+``sys.exit``: the durability story — per-group ``metrics.flush()`` and
+the runner's atomic cache writes — is what keeps the partial sidecar
+and cache readable, and the tests assert exactly that.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import signal
 import sys
 from pathlib import Path
 
-from repro.obs import trace
+from repro.obs import metrics, trace
 from repro.study.runner import Runner
 from repro.sweep.plan import Shard
 
@@ -38,7 +44,7 @@ FAULT_EXIT = 17
 
 
 def _maybe_fault(done: int, fault_after: int | None,
-                 fault_flag: str | None) -> None:
+                 fault_flag: str | None, fault_mode: str = "exit") -> None:
     if fault_after is None or done < fault_after:
         return
     if fault_flag is not None:
@@ -48,6 +54,10 @@ def _maybe_fault(done: int, fault_after: int | None,
         flag.parent.mkdir(parents=True, exist_ok=True)
         flag.write_text("tripped\n")
     print(json.dumps({"fault_injected_after": done}), flush=True)
+    if fault_mode == "kill":
+        # the real thing: no atexit flush, no unwinding — only the
+        # per-group flushes already on disk survive
+        os.kill(os.getpid(), signal.SIGKILL)
     sys.exit(FAULT_EXIT)
 
 
@@ -64,6 +74,9 @@ def main(argv=None) -> int:
                     help="test hook: exit(17) after N completed trials")
     ap.add_argument("--fault-flag", default=None,
                     help="sentinel file making --fault-after a one-shot")
+    ap.add_argument("--fault-mode", choices=("exit", "kill"), default="exit",
+                    help="fault flavor: clean exit(17), or SIGKILL self "
+                         "(tests sidecar/cache durability)")
     args = ap.parse_args(argv)
 
     with open(args.shard) as f:
@@ -81,7 +94,7 @@ def main(argv=None) -> int:
     # the driver's timeline
     with trace.span("sweep.shard", worker=shard.worker, trials=total,
                     groups=len(groups)):
-        _maybe_fault(done, args.fault_after, args.fault_flag)
+        _maybe_fault(done, args.fault_after, args.fault_flag, args.fault_mode)
         for group in groups.values():
             with trace.span("sweep.group", stack_key=group[0].stack_key,
                             trials=len(group)):
@@ -89,7 +102,11 @@ def main(argv=None) -> int:
             done += len(group)
             print(json.dumps({"done": done, "of": total,
                               "keys": [t.key for t in group]}), flush=True)
-            _maybe_fault(done, args.fault_after, args.fault_flag)
+            # durability point: everything this group counted is on disk
+            # before a fault (even SIGKILL) can take the process down
+            metrics.flush(0)
+            _maybe_fault(done, args.fault_after, args.fault_flag,
+                         args.fault_mode)
     return 0
 
 

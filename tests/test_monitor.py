@@ -1,0 +1,436 @@
+"""Runtime health monitor: digest, SLOs, drift watch, windows, CLI.
+
+The acceptance contract of the subsystem (ISSUE 10):
+* the quantile digest is bounded, deterministic, mergeable, and clamps
+  its interpolated read-out to the observed range;
+* SLO predicates evaluate per closed window — empty windows are no-op
+  rolls, never vacuous breaches — and each breach lands as an
+  ``slo.breach.<name>`` counter plus an ``slo.breach`` trace instant;
+* the EWMA drift watch flags rising / non-finite loss curves and never
+  flags a clean descending one (the committed BENCH_live curves);
+* staleness is measured against the publisher's bound captured at
+  attach time, so a stalled publisher breaches instead of relaxing it;
+* ``python -m repro.obs.monitor --check`` exits 0 on a clean monitored
+  run and nonzero per breach; ``REPRO_METRICS=1`` persists sidecars
+  without span tracing.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.live import LiveConfig, LiveLearner, SnapshotPublisher, \
+    SyntheticStream
+from repro.obs import export, metrics, trace
+from repro.obs.digest import LATENCY_EDGES, QuantileDigest
+from repro.obs.monitor import (DEFAULT_LIVE_SLOS, DEFAULT_SERVE_SLOS,
+                               EWMADrift, HealthMonitor, SLOSpec)
+from repro.obs import monitor as monitor_mod
+from repro.serve.glm import GLMScoreEngine, ScoreRequest
+
+TASK = "lr"
+
+
+@pytest.fixture
+def traced(tmp_path, monkeypatch):
+    """Tracing (and thus metrics persistence) into a temp dir."""
+    monkeypatch.setenv(trace.ENV_TRACE, "1")
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    monkeypatch.delenv(trace.ENV_TRACE_TAG, raising=False)
+    trace.refresh()
+    metrics.reset()
+    metrics._last_flush = 0.0
+    yield tmp_path
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    trace.refresh()
+    metrics.reset()
+
+
+@pytest.fixture
+def metrics_only(tmp_path, monkeypatch):
+    """REPRO_METRICS=1 with tracing OFF (satellite: decoupled sidecar)."""
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    monkeypatch.setenv(metrics.ENV_METRICS, "1")
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    monkeypatch.delenv(trace.ENV_TRACE_TAG, raising=False)
+    trace.refresh()
+    metrics.reset()
+    metrics._last_flush = 0.0
+    yield tmp_path
+    monkeypatch.delenv(metrics.ENV_METRICS, raising=False)
+    trace.refresh()
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# quantile digest
+# ---------------------------------------------------------------------------
+
+
+def test_digest_quantiles_interpolate_and_clamp_to_observed_range():
+    d = QuantileDigest()
+    assert d.quantile(0.5) is None and d.mean is None       # empty
+    for v in (0.001, 0.002, 0.003, 0.004, 0.100):
+        d.observe(v)
+    assert d.quantile(0.0) == pytest.approx(0.001)          # exact min
+    assert d.quantile(1.0) == pytest.approx(0.100)          # exact max
+    p50 = d.quantile(0.5)
+    assert 0.001 <= p50 <= 0.0056                           # within bucket
+    assert d.quantile(0.25) <= p50 <= d.quantile(0.99)      # monotone in q
+    assert d.mean == pytest.approx(0.022)
+    # clamp: every estimate stays inside [min, max]
+    for q in (0.0, 0.1, 0.5, 0.9, 0.99, 1.0):
+        assert 0.001 <= d.quantile(q) <= 0.100
+    with pytest.raises(ValueError, match="in \\[0, 1\\]"):
+        d.quantile(1.5)
+
+
+def test_digest_is_deterministic_and_bounded():
+    a, b = QuantileDigest(), QuantileDigest()
+    vals = [10.0 ** (i % 7 - 5) for i in range(1000)]
+    for v in vals:
+        a.observe(v)
+    for v in reversed(vals):                # order must not matter
+        b.observe(v)
+    sa, sb = a.snapshot(), b.snapshot()
+    assert sb["sum"] == pytest.approx(sa.pop("sum"))        # fp assoc. only
+    sb.pop("sum")
+    assert sa == sb                         # counts/quantile state identical
+    assert a.quantile(0.99) == b.quantile(0.99)
+    assert len(a.counts) == len(LATENCY_EDGES) + 1          # fixed memory
+
+
+def test_digest_merge_and_snapshot_roundtrip():
+    a, b = QuantileDigest(), QuantileDigest()
+    for v in (0.001, 0.002):
+        a.observe(v)
+    for v in (0.5, 2.0):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 4 and a.min == 0.001 and a.max == 2.0
+    back = QuantileDigest.from_snapshot(a.snapshot())
+    assert back.snapshot() == a.snapshot()
+    assert back.quantile(0.99) == a.quantile(0.99)
+    with pytest.raises(ValueError, match="different edges"):
+        a.merge(QuantileDigest((1.0, 2.0)))
+    with pytest.raises(ValueError, match="sorted"):
+        QuantileDigest((2.0, 1.0))
+    with pytest.raises(ValueError, match="buckets"):
+        QuantileDigest.from_snapshot({"edges": [1.0], "counts": [1, 2, 3],
+                                      "count": 6, "sum": 1.0,
+                                      "min": 0.1, "max": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# SLO specs
+# ---------------------------------------------------------------------------
+
+
+def test_slospec_predicates_and_validation():
+    ceil = SLOSpec("lat", "p99_s", "<=", 0.5)
+    floor = SLOSpec("tput", "rps", ">=", 1.0)
+    assert ceil.holds(0.5) and not ceil.holds(0.50001)
+    assert floor.holds(1.0) and not floor.holds(0.9)
+    assert ceil.to_dict()["op"] == "<="
+    with pytest.raises(ValueError, match="op"):
+        SLOSpec("bad", "x", "<", 1.0)
+    names = [s.name for s in DEFAULT_LIVE_SLOS]
+    assert set(s.name for s in DEFAULT_SERVE_SLOS) <= set(names)
+    assert {"staleness", "loss_divergence"} <= set(names)
+
+
+def test_monitor_rejects_duplicate_slo_names_and_bad_window():
+    dup = (SLOSpec("a", "rps", ">=", 1.0), SLOSpec("a", "p99_s", "<=", 1.0))
+    with pytest.raises(ValueError, match="duplicate"):
+        HealthMonitor(dup)
+    with pytest.raises(ValueError, match="window_s"):
+        HealthMonitor(window_s=0)
+
+
+# ---------------------------------------------------------------------------
+# EWMA drift watch
+# ---------------------------------------------------------------------------
+
+
+def test_drift_clean_descending_curve_never_flags():
+    """The committed BENCH_live convergence curves (restarting per cell)
+    must stay clean — the monitored benchmark replays exactly these."""
+    w = EWMADrift()
+    cell = [354.891357, 258.262146, 241.981476, 244.043549, 229.709702]
+    for _ in range(4):                      # four cells share one watch
+        for v in cell:
+            w.observe(v)
+        assert not w.diverging
+    assert w.status in ("ok", "plateau")
+
+
+def test_drift_flags_rising_and_nonfinite_loss():
+    w = EWMADrift()
+    for v in (1.0, 2.0, 3.0):
+        w.observe(v)
+    assert w.diverging and w.status == "diverging"
+
+    blown = EWMADrift()
+    blown.observe(1.0)
+    blown.observe(float("nan"))
+    assert blown.diverging and not blown.plateaued
+
+    flat = EWMADrift()
+    for _ in range(6):
+        flat.observe(5.0)
+    assert flat.plateaued and not flat.diverging
+    assert flat.status == "plateau"
+
+    with pytest.raises(ValueError, match="alpha"):
+        EWMADrift(alpha_fast=0.1, alpha_slow=0.5)
+
+
+# ---------------------------------------------------------------------------
+# windows, rolls, breach emission
+# ---------------------------------------------------------------------------
+
+
+def test_windows_roll_on_clock_and_emit_breach_counters_and_instants(traced):
+    now = [0.0]
+    mon = HealthMonitor(
+        (SLOSpec("lat", "p99_s", "<=", 0.01),
+         SLOSpec("tput", "rps", ">=", 1000.0)),
+        window_s=1.0, clock=lambda: now[0])
+    mon.on_flush(n=4, padded=8, queue_depth=2, latencies=[0.001] * 4)
+    now[0] = 2.0
+    # the next hook call rolls window 0 lazily before recording
+    mon.on_flush(n=4, padded=8, queue_depth=5, latencies=[0.5] * 4)
+    assert mon.windows == 1
+    w0 = mon.history[0]
+    assert w0["n_scored"] == 4 and w0["batch_fill"] == pytest.approx(0.5)
+    assert w0["breaches"] == ["tput"]       # 4 req / 2 s, p99 fine
+    now[0] = 2.5
+    w1 = mon.roll()
+    assert sorted(w1["breaches"]) == ["lat", "tput"]
+    assert mon.total_breaches == 3
+    assert mon.breaches == {"lat": 1, "tput": 2}
+
+    snap = metrics.snapshot()
+    assert snap["counters"]["slo.breaches"] == 3
+    assert snap["counters"]["slo.breach.lat"] == 1
+    assert snap["counters"]["slo.breach.tput"] == 2
+    assert snap["counters"]["slo.windows"] == 2
+    assert snap["gauges"]["health.p99_s"] >= 0.01
+
+    ft = export.read_trace(trace.current_path())
+    breaches = [i for i in ft.instants if i["name"] == "slo.breach"]
+    assert len(breaches) == 3
+    assert {b["args"]["slo"] for b in breaches} == {"lat", "tput"}
+    assert all("threshold" in b["args"] for b in breaches)
+
+    s = mon.summary()
+    assert s["total_breaches"] == 3 and s["windows"] == 2
+    assert s["cumulative"]["count"] == 8
+    assert "tput" in mon.table()
+
+
+def test_empty_windows_never_fabricate_breaches():
+    now = [0.0]
+    mon = HealthMonitor(DEFAULT_SERVE_SLOS, window_s=1.0,
+                        clock=lambda: now[0])
+    for t in (5.0, 10.0, 100.0):            # long idle stretches
+        now[0] = t
+        assert mon.roll() is None
+    assert mon.windows == 0 and mon.total_breaches == 0
+    # a real observation after the idle gap still lands in a fresh window
+    mon.on_flush(n=2, padded=2, queue_depth=0, latencies=[0.001, 0.002])
+    now[0] = 101.0
+    w = mon.roll()
+    assert w["n_scored"] == 2 and w["breaches"] == []
+
+
+def test_loss_only_window_skips_latency_slos():
+    now = [0.0]
+    mon = HealthMonitor(DEFAULT_LIVE_SLOS, window_s=1.0,
+                        clock=lambda: now[0])
+    mon.observe_loss(10.0)
+    mon.observe_loss(9.0)
+    w = mon.roll()
+    # no scoring: p99/rps/staleness have no value -> skipped, not breached
+    assert w["p99_s"] is None and w["rps"] is None
+    assert w["breaches"] == [] and w["evaluated"] == 1      # loss_divergence
+    assert w["loss"] == 9.0 and w["loss_status"] == "ok"
+
+
+def test_history_is_bounded():
+    now = [0.0]
+    mon = HealthMonitor((), window_s=1.0, clock=lambda: now[0],
+                        max_windows=4)
+    for i in range(10):
+        mon.observe_loss(float(i))
+        now[0] += 2.0
+        mon.roll()
+    assert mon.windows == 10 and len(mon.history) == 4
+    assert mon.history[-1]["window"] == 9
+
+
+# ---------------------------------------------------------------------------
+# engine + live hooks
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("queue_depth", 4)
+    kw.setdefault("flush_deadline_s", 0.0)
+    return GLMScoreEngine(TASK, np.zeros(16, np.float32), ell_width=2, **kw)
+
+
+def test_engine_flush_and_reject_report_into_windows():
+    mon = HealthMonitor(DEFAULT_SERVE_SLOS, window_s=3600.0)
+    eng = _engine()
+    assert mon.attach_engine(eng) is mon    # chainable attach
+    assert eng.monitor is mon
+    for rid in range(6):                    # queue_depth 4: two shed
+        eng.try_admit(ScoreRequest(rid, np.ones(2), np.zeros(2, int)))
+    eng.drain()
+    w = mon.roll()
+    assert w["n_scored"] == 4 and w["rejected"] == 2
+    assert w["flushes"] == 1 and w["batch_fill"] == 1.0
+    assert w["p99_s"] > 0 and w["breaches"] == []
+
+
+def test_engine_fault_stall_injects_latency_breach():
+    mon = HealthMonitor((SLOSpec("lat", "p99_s", "<=", 0.02),),
+                        window_s=3600.0)
+    eng = _engine(fault_stall_s=0.05)
+    mon.attach_engine(eng)
+    eng.try_admit(ScoreRequest(0, np.ones(2), np.zeros(2, int)))
+    eng.flush()
+    w = mon.roll()
+    assert w["p99_s"] >= 0.05 and w["breaches"] == ["lat"]
+    with pytest.raises(ValueError, match="fault_stall_s"):
+        _engine(fault_stall_s=-1.0)
+
+
+def _live_stack(merge_every=2, every_merges=1):
+    stream = SyntheticStream(n_batch=8, d=32, seed=0)
+    cfg = LiveConfig(task=TASK, replicas=2, step_size=0.1,
+                     merge_every=merge_every, compress=False)
+    lrn = LiveLearner(cfg, stream)
+    eng = GLMScoreEngine(TASK, np.zeros(32, np.float32),
+                         ell_width=stream.ell_width, max_batch=4)
+    pub = SnapshotPublisher(eng, every_merges=every_merges).attach(lrn)
+    return lrn, pub, eng
+
+
+def test_watch_live_staleness_stays_under_bound_when_publishing():
+    lrn, pub, eng = _live_stack(merge_every=2, every_merges=1)
+    mon = HealthMonitor(DEFAULT_LIVE_SLOS, window_s=3600.0)
+    mon.watch_live(lrn, pub)
+    assert lrn.monitor is mon and pub.monitor is mon
+    lrn.run(8)                              # merges at 2,4,6,8 -> publishes
+    w = mon.roll()
+    assert w["staleness_bound"] == 2
+    assert w["staleness_steps"] <= 2 and w["publishes"] == 4
+    assert w["staleness_ratio"] <= 1.0
+    assert "staleness" not in w["breaches"]
+
+
+def test_stalled_publisher_breaches_against_bound_captured_at_attach():
+    lrn, pub, eng = _live_stack(merge_every=2, every_merges=1)
+    mon = HealthMonitor(DEFAULT_LIVE_SLOS, window_s=3600.0)
+    mon.watch_live(lrn, pub)
+    lrn.run(2)                              # first publish at merge 1
+    assert pub.publishes >= 1
+    pub.every_merges = 10 ** 9              # injected stall
+    lrn.run(10)                             # staleness climbs to ~10 >> 2
+    w = mon.roll()
+    assert w["staleness_bound"] == 2        # attach-time bound, not relaxed
+    assert w["staleness_steps"] > 2 and w["staleness_ratio"] > 1.0
+    assert "staleness" in w["breaches"]
+    assert mon.breaches.get("staleness", 0) >= 1
+
+
+def test_watch_live_before_first_publish_skips_staleness():
+    lrn, pub, eng = _live_stack(merge_every=4, every_merges=1)
+    mon = HealthMonitor(DEFAULT_LIVE_SLOS, window_s=3600.0)
+    mon.watch_live(lrn, pub)
+    lrn.run(2)                              # no merge yet -> no publish
+    mon.observe_loss(1.0)                   # make the window non-empty
+    w = mon.roll()
+    assert w["staleness_steps"] is None and w["staleness_ratio"] is None
+    assert "staleness" not in w["breaches"]
+
+
+# ---------------------------------------------------------------------------
+# CLI + sidecar persistence
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_cli_clean_run_exits_zero(metrics_only, capsys):
+    mon = HealthMonitor(DEFAULT_SERVE_SLOS, window_s=3600.0)
+    eng = _engine()
+    mon.attach_engine(eng)
+    eng.try_admit(ScoreRequest(0, np.ones(2), np.zeros(2, int)))
+    eng.drain()
+    mon.roll()
+    assert metrics.flush(0) is not None     # sidecar, no tracing
+    assert not list(metrics_only.glob("trace-*.jsonl"))
+
+    assert monitor_mod.main([str(metrics_only), "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "breaches=0" in out.replace(" ", "") or "0 breach(es)" in out
+
+    capsys.readouterr()
+    assert monitor_mod.main([str(metrics_only), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["total_breaches"] == 0 and doc["windows"] == 1
+    assert doc["files"][0]["health"]["p99_s"] > 0
+
+
+def test_monitor_cli_check_exit_counts_breaches(traced, capsys):
+    now = [0.0]
+    mon = HealthMonitor((SLOSpec("lat", "p99_s", "<=", 1e-9),),
+                        window_s=1.0, clock=lambda: now[0])
+    for i in range(3):
+        mon.on_flush(n=1, padded=1, queue_depth=0, latencies=[0.01])
+        now[0] += 2.0
+        mon.roll()
+    assert metrics.flush(0) is not None
+    assert monitor_mod.main([str(traced), "--check"]) == 3
+    out = capsys.readouterr().out
+    assert "BREACH lat" in out
+    capsys.readouterr()
+    assert monitor_mod.main([str(traced), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["breaches"] == {"lat": 3}
+    assert doc["trace_breach_events"] == 3  # instants on the timeline
+
+
+def test_monitor_cli_no_sidecars_is_a_check_failure(tmp_path, capsys):
+    assert monitor_mod.main([str(tmp_path), "--check"]) == 1
+    assert "no metrics sidecars" in capsys.readouterr().err
+    assert monitor_mod.main([str(tmp_path)]) == 0   # report mode: not fatal
+
+
+def test_metrics_env_alone_enables_sidecar_and_flush_rate_limit(
+        metrics_only):
+    assert not trace.enabled() and metrics.enabled()
+    metrics.counter("x.hits").inc()
+    p = metrics.flush(0)
+    assert p is not None and p.parent == metrics_only
+    assert p.name.startswith("metrics-") and "main" in p.name
+    assert json.loads(p.read_text())["counters"]["x.hits"] == 1
+    # rate limit: an immediate second flush under the floor is skipped
+    assert metrics.flush(3600.0) is None
+    assert metrics.flush(0) is not None     # floor 0 always writes
+
+
+def test_metrics_disabled_flush_is_noop(tmp_path, monkeypatch):
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    monkeypatch.delenv(metrics.ENV_METRICS, raising=False)
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path))
+    trace.refresh()
+    metrics.reset()
+    metrics.counter("x").inc()
+    assert not metrics.enabled()
+    assert metrics.flush(0) is None
+    assert list(tmp_path.iterdir()) == []
+    metrics.reset()

@@ -164,6 +164,65 @@ def test_report_cli_check_and_perfetto(traced, capsys):
     assert report.main([str(traced / "empty-subdir")]) == 1    # nothing there
 
 
+def test_report_json_is_machine_readable(traced, capsys):
+    """``--json`` (satellite): the tables as data — what CI smoke jobs
+    parse and assert on instead of grepping human output."""
+    with trace.span("runner.trial", key="k"):
+        with trace.span("engine.epoch", epoch=1):
+            pass
+        with trace.span("engine.epoch", epoch=2):
+            pass
+    trace.instant("kernel.caps_fallback", chosen="reference")
+    metrics.counter("serve.scored").inc(7)
+    metrics.write_sidecar()
+    capsys.readouterr()
+    assert report.main([str(traced), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert {"engine", "runner"} <= set(doc["layers"])
+    assert doc["spans"]["engine.epoch"]["count"] == 2
+    assert doc["spans"]["runner.trial"]["total_s"] >= \
+        doc["spans"]["runner.trial"]["self_s"]
+    assert doc["instants"] == {"kernel.caps_fallback": 1}
+    assert doc["counters"]["serve.scored"] == 7
+    [f] = doc["files"]
+    assert f["tag"] == trace.DEFAULT_TAG and f["spans"] == 3
+    assert len(doc["metrics_files"]) == 1
+
+
+def test_chrome_events_stitch_skewed_per_file_clock_anchors(tmp_path):
+    """Anchor stitching (satellite): two processes whose perf_counter
+    epochs are wildly skewed must still land at their *wall-clock*
+    relative offsets in the merged timeline — ``unix_ns`` re-anchors
+    each file through its own ``(t0_unix_ns, t0_perf_ns)`` pair."""
+    def write(name, tag, t0_unix, t0_perf, ts):
+        p = tmp_path / name
+        p.write_text("\n".join(json.dumps(r, sort_keys=True) for r in (
+            {"kind": "meta", "schema": trace.TRACE_SCHEMA, "pid": 1,
+             "tag": tag, "t0_unix_ns": t0_unix, "t0_perf_ns": t0_perf},
+            {"kind": "span", "name": f"{tag}.work", "ts": ts,
+             "dur": 1_000_000, "tid": 0, "depth": 0},
+        )) + "\n")
+        return p
+
+    # A: perf epoch 0; its span starts 0.5s after its unix anchor (1.0s)
+    write("trace-a-1.jsonl", "a", 1_000_000_000, 0, 500_000_000)
+    # B: perf epoch 7s ahead; span 0.1s after its unix anchor (2.0s)
+    write("trace-b-1.jsonl", "b", 2_000_000_000, 7_000_000_000,
+          7_100_000_000)
+    traces = export.collect([tmp_path])
+    a, b = sorted(traces, key=lambda t: t.tag)
+    assert a.unix_ns(500_000_000) == 1_500_000_000
+    assert b.unix_ns(7_100_000_000) == 2_100_000_000
+
+    evs = {ev["name"]: ev for ev in export.chrome_events(traces)
+           if ev.get("ph") == "X"}
+    # merged timeline is zero-based at the earliest event; the 0.6s
+    # wall-clock gap survives the 7s perf-anchor skew (ts is in us)
+    assert evs["a.work"]["ts"] == pytest.approx(0.0)
+    assert evs["b.work"]["ts"] == pytest.approx(600_000.0)
+    assert export.validate_chrome(export.to_chrome(traces)) == []
+
+
 # ---------------------------------------------------------------------------
 # metrics registry
 # ---------------------------------------------------------------------------

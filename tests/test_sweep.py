@@ -220,6 +220,50 @@ def test_worker_death_requeues_unfinished_and_keeps_partial_cache(tmp_path):
     assert merge["merged"] == len(trials)
 
 
+def test_sigkilled_worker_keeps_readable_partial_metrics_sidecar(
+        tmp_path, monkeypatch):
+    """SIGKILL durability (satellite): ``--fault-mode kill`` bypasses
+    atexit entirely, so the only sidecar bytes a dead worker leaves are
+    the per-stack-group ``metrics.flush()`` writes — which must be a
+    complete, readable snapshot (atomic tmp+rename), tagged with the
+    attempt (``shard0a0``) the executor assigned via the trace-tag env
+    even though tracing is off."""
+    from repro.obs import metrics, trace
+
+    monkeypatch.delenv(trace.ENV_TRACE, raising=False)
+    monkeypatch.setenv(metrics.ENV_METRICS, "1")
+    monkeypatch.setenv(trace.ENV_TRACE_DIR, str(tmp_path / "tracedir"))
+    trace.refresh()
+
+    trials = _trials(tasks=("lr", "svm"))    # 2 stack groups x 2 trials
+    st = store.StudyStore(tmp_path / "out.json",
+                          jsonl_path=tmp_path / "runs.jsonl")
+    ex = LocalProcessExecutor(
+        workers=1, work_dir=tmp_path / "work",
+        worker_args=("--fault-after", "2", "--fault-mode", "kill",
+                     "--fault-flag", str(tmp_path / "flag")))
+    out = Runner(cache_dir=tmp_path / "cache", store=st, executor=ex) \
+        .run(trials)
+    st.write()
+    assert len(out) == len(trials)          # retry completed the shard
+
+    events = [json.loads(line)
+              for line in (tmp_path / "runs.jsonl").read_text().splitlines()]
+    shard_events = [e for e in events if e.get("event") == "sweep_shard"]
+    died, retried = shard_events
+    assert died["returncode"] == -9         # a real SIGKILL, not exit(17)
+    assert retried["returncode"] == 0
+
+    # the killed attempt's partial sidecar survived and parses cleanly
+    killed = sorted((tmp_path / "tracedir").glob("metrics-shard0a0-*.json"))
+    assert killed, "SIGKILLed worker left no metrics sidecar"
+    snap = json.loads(killed[0].read_text())
+    assert snap["schema"] == metrics.METRICS_SCHEMA
+    assert snap["counters"]                 # the first group's activity
+    # no half-written tmp files anywhere (atomic rename discipline)
+    assert not list((tmp_path / "tracedir").glob("*.tmp*"))
+
+
 def test_retries_exhausted_raises_but_merges_completed_trials(tmp_path):
     """Exhausted retries fail the sweep — after merging what did finish
     and recording provenance, so the next attempt resumes from the
